@@ -1,0 +1,41 @@
+"""Paper Fig. 7 analogue: objective improvement of one K-FAC update vs the
+factored-Tikhonov strength gamma, with and without exact-F re-scaling."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import KFACConfig
+from repro.core.kfac import KFAC
+from benchmarks.benchlib import partially_train
+
+
+def run():
+    mlp, params, batch, state0 = partially_train(steps=12)
+    rows = []
+    for rescale in (True, False):
+        best = (None, -1e9)
+        for gamma in (0.03, 0.1, 0.3, 1.0, 3.0, 10.0):
+            cfg = KFACConfig(use_rescale=rescale, use_momentum=False,
+                             lambda_init=1.0, fixed_lr=1.0)
+            opt = KFAC(mlp, cfg, family="bernoulli")
+            rng = jax.random.PRNGKey(0)
+            state = dict(state0, gamma=jnp.float32(gamma))
+            state, grads, metr = opt.stats_grads(state, params, batch, rng)
+            state = opt.refresh_inverses(state)
+            new_params, state, um = opt.apply_update(state, params, grads,
+                                                     batch, rng)
+            (l_new, _), _ = mlp.loss(new_params, None, batch, rng, "plain")
+            improve = float(metr["loss"] - l_new)
+            rows.append((f"damping_gamma{gamma}_rescale{int(rescale)}",
+                         0.0, improve))
+            if improve > best[1]:
+                best = (gamma, improve)
+        rows.append((f"damping_best_rescale{int(rescale)}", best[0] or 0.0,
+                     best[1]))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, val in run():
+        print(f"{name},{us:.0f},{val:.5f}")

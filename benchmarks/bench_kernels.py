@@ -1,0 +1,60 @@
+"""Kernel microbenches (paper S8 cost model): wall-clock of the pure-jnp
+paths (what this CPU container executes) + analytic flops.  On TPU the
+Pallas kernels replace these; interpret-mode timings are correctness-only."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time(f, *args, iters=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    d, n = 512, 4096
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, d), jnp.float32)
+    c = jnp.zeros((d, d))
+    f = jax.jit(lambda x, c: ref.factor_update_ref(x, c, alpha=0.05,
+                                                   beta=0.95))
+    us = _time(f, x, c)
+    rows.append(("factor_update_512", us, 2 * n * d * d / (us * 1e-6) / 1e9))
+
+    m = jax.random.normal(jax.random.PRNGKey(1), (d, d))
+    m = m @ m.T / d + jnp.eye(d)
+    g = jax.jit(lambda m: ref.ns_inverse_ref(m, 12))
+    us = _time(g, m)
+    rows.append(("ns_inverse_512x12", us, 12 * 2 * 2 * d ** 3 / (us * 1e-6) / 1e9))
+
+    a_inv = jnp.eye(d)
+    g_inv = jnp.eye(d)
+    v = jax.random.normal(jax.random.PRNGKey(2), (d, d))
+    h = jax.jit(ref.precondition_ref)
+    us = _time(h, a_inv, v, g_inv)
+    rows.append(("precondition_512", us, 2 * 2 * d ** 3 / (us * 1e-6) / 1e9))
+
+    b, hq, hkv, t, hd = 1, 8, 2, 1024, 64
+    q = jax.random.normal(jax.random.PRNGKey(3), (b, hq, t, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(4), (b, hkv, t, hd), jnp.float32)
+    vv = jax.random.normal(jax.random.PRNGKey(5), (b, hkv, t, hd), jnp.float32)
+    fa = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
+    us = _time(fa, q, k, vv)
+    rows.append(("attention_ref_1k", us,
+                 4 * b * hq * t * t * hd / (us * 1e-6) / 1e9))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, gf in run():
+        print(f"{name},{us:.0f},{gf:.2f}")

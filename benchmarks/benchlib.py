@@ -1,0 +1,31 @@
+"""Shared helpers for the benchmark harnesses."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import KFACConfig
+from repro.core.kfac import KFAC
+from repro.data.pipeline import SyntheticAutoencoderData
+from repro.models.mlp import MLP
+
+DIMS = [64, 48, 24, 12, 24, 48, 64]
+
+
+def partially_train(steps=12, dims=None):
+    """A partially-trained autoencoder + live K-FAC state (the paper's Fig. 7
+    setup uses the iteration-500 network; we use a miniature analogue)."""
+    dims = dims or DIMS
+    mlp = MLP(dims, nonlin="tanh", loss="bernoulli")
+    params = mlp.init_params(jax.random.PRNGKey(0), sparse=False)
+    data = SyntheticAutoencoderData(dims[0], 8, 1024, seed=7)
+    batch = data.batch(0)
+    cfg = KFACConfig(lambda_init=3.0, t3=5)
+    opt = KFAC(mlp, cfg, family="bernoulli")
+    state = opt.init(params, batch)
+    for step in range(steps):
+        rng = jax.random.PRNGKey(1000 + step)
+        state, grads, _ = opt.stats_grads(state, params, batch, rng)
+        if step % cfg.t3 == 0 or step < 3:
+            state = opt.refresh_inverses(state)
+        params, state, _ = opt.apply_update(state, params, grads, batch, rng)
+    return mlp, params, batch, state

@@ -1,0 +1,161 @@
+"""Roofline derivation from the dry-run artifacts (per arch x shape x mesh).
+
+Terms per cell (TPU v5e targets):
+  compute    = HLO_FLOPs_per_device / 197e12 [bf16 FLOP/s]
+  memory     = HLO_bytes_per_device / 819e9  [HBM B/s]   (bytes_min: TPU-like
+               fusion model — only dot/conv/collective/slice ops touch HBM;
+               bytes_raw from the unfused CPU module is reported alongside)
+  collective = moved_bytes_per_device / 50e9 [B/s per ICI link]
+
+FLOPs/bytes come from the trip-count-aware HLO walker (repro.launch.hlo_cost)
+over the SPMD-partitioned module, so they are already per-device.
+
+MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) per device per step —
+fwd+bwd of the weight matmuls only; the ratio to HLO_FLOPs exposes remat /
+attention / K-FAC overhead (and for serve shapes we report per-token maths).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def active_params(cfg) -> float:
+    """Per-token active parameter count (MoE: top-k experts only)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    total = v * d * (1 if cfg.tie_embeddings else 2)
+    from repro.models.lm import build_pattern
+    from repro.models.ssm import dt_rank
+    pattern = build_pattern(cfg)
+    n_groups = cfg.n_layers // len(pattern)
+    for spec in pattern:
+        if spec.attn in ("global", "local"):
+            total += n_groups * (d * cfg.q_dim * 2 + d * cfg.kv_dim * 2)
+        elif spec.attn == "mamba":
+            di = cfg.ssm_expand * d
+            r = dt_rank(d)
+            total += n_groups * (d * 2 * di + di * (r + 2 * cfg.ssm_state_dim)
+                                 + r * di + di * d)
+        elif spec.attn == "rwkv":
+            total += n_groups * (5 * d * d + d * 64 + 64 * d
+                                 + d * f + f * d + d * d)
+        if spec.cross:
+            total += n_groups * (d * cfg.q_dim * 2 + d * cfg.kv_dim * 2)
+        if spec.mlp == "dense":
+            total += n_groups * 3 * d * f
+        elif spec.mlp == "moe":
+            total += n_groups * (d * cfg.n_experts
+                                 + cfg.top_k * 3 * d * f
+                                 + (3 * d * f if cfg.moe_shared_expert else 0))
+    if cfg.encoder_layers:
+        total += cfg.encoder_layers * (d * d * 4 + 3 * d * f)
+    return float(total)
+
+
+def model_flops(cfg, shape, n_chips: int) -> float:
+    """6·N_active·D per device (train); serve shapes: 2·N_active per token."""
+    n_act = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens / n_chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens / n_chips
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n_act * tokens / n_chips
+
+
+def load_cell(arch: str, shape: str, pod: str = "pod256"):
+    fn = RESULTS / "dryrun" / pod / f"{arch}__{shape}.json"
+    if not fn.exists():
+        return None
+    return json.loads(fn.read_text())
+
+
+def cell_terms(rec, cfg, shape, n_chips=256):
+    h = rec["hlo"]
+    compute = h["flops"] / PEAK_FLOPS
+    memory = h.get("bytes_min", h["bytes"]) / HBM_BW
+    coll = h["collectives"]["total"] / LINK_BW
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape, n_chips)
+    return {
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops": h["flops"],
+        "useful_ratio": mf / max(h["flops"], 1.0),
+        "bytes_raw": h["bytes"],
+        "step_s_bound": max(terms.values()),
+        "roofline_fraction": (h["flops"] / PEAK_FLOPS) / max(terms.values()),
+    }
+
+
+def build_table(pod="pod256"):
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            rec = load_cell(arch, sname, pod)
+            if rec is None:
+                rows.append({"arch": arch, "shape": sname,
+                             "status": "missing"})
+                continue
+            if rec.get("skipped"):
+                rows.append({"arch": arch, "shape": sname,
+                             "status": "skipped"})
+                continue
+            if "error" in rec:
+                rows.append({"arch": arch, "shape": sname, "status": "FAIL"})
+                continue
+            row = {"arch": arch, "shape": sname, "status": "ok",
+                   "compile_s": rec.get("lower_compile_seconds"),
+                   **cell_terms(rec, cfg, shape)}
+            rows.append(row)
+    return rows
+
+
+def markdown(rows):
+    hdr = ("| arch | shape | compute(s) | memory(s) | collective(s) | "
+           "dominant | 6ND/HLO | roofline frac |")
+    sep = "|" + "---|" * 8
+    out = [hdr, sep]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r['status']} | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def run():
+    rows = build_table()
+    ok = [r for r in rows if r["status"] == "ok"]
+    out = [("roofline_cells_ok", 0.0, float(len(ok)))]
+    for r in ok:
+        out.append((f"roofline_{r['arch']}_{r['shape']}_frac", 0.0,
+                    r["roofline_fraction"]))
+    (RESULTS / "roofline.md").write_text(markdown(rows))
+    (RESULTS / "roofline.json").write_text(json.dumps(rows, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    rows = build_table()
+    print(markdown(rows))
+    (RESULTS / "roofline.md").write_text(markdown(rows))
+    (RESULTS / "roofline.json").write_text(json.dumps(rows, indent=1))

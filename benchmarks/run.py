@@ -1,0 +1,35 @@
+"""Benchmark harness entry — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Heavy multi-pod numbers come from
+the dry-run artifacts (see repro.launch.dryrun + benchmarks.roofline).
+"""
+from __future__ import annotations
+
+import traceback
+
+
+def main() -> None:
+    suites = []
+    from benchmarks import (bench_optimizer_race, bench_damping,
+                            bench_fisher_quality, bench_batch_scaling,
+                            bench_kernels, roofline)
+    suites = [
+        ("optimizer_race", bench_optimizer_race.run),   # Fig. 10/11
+        ("damping", bench_damping.run),                 # Fig. 7
+        ("fisher_quality", bench_fisher_quality.run),   # Fig. 2/3/5/6
+        ("batch_scaling", bench_batch_scaling.run),     # Fig. 9
+        ("kernels", bench_kernels.run),                 # S8 cost model
+        ("roofline", roofline.run),                     # dry-run derived
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        try:
+            for row in fn():
+                print(f"{row[0]},{row[1]:.0f},{row[2]:.4f}", flush=True)
+        except Exception:  # noqa: BLE001
+            print(f"{name},0,ERROR")
+            traceback.print_exc()
+
+
+if __name__ == '__main__':
+    main()

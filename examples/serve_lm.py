@@ -1,0 +1,27 @@
+"""Batched serving example: continuous-batching engine over a small model.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import jax
+
+from repro.configs import get_reduced_config
+from repro.models.lm import LM
+from repro.serving.server import Engine, Request
+
+cfg = get_reduced_config("smollm-135m")
+lm = LM(cfg)
+params = lm.init_params(jax.random.PRNGKey(0))
+
+engine = Engine(lm, params, batch_slots=4, max_len=64)
+requests = [
+    Request(uid=i, prompt=[(3 * i + j) % cfg.vocab_size for j in range(5)],
+            max_new=6, temperature=0.0 if i % 2 == 0 else 0.7)
+    for i in range(7)
+]
+engine.run(requests)
+for r in requests:
+    print(f"req {r.uid}: prompt={r.prompt} -> {r.out}")
+done = sum(r.done for r in requests)
+print(f"completed {done}/{len(requests)} requests "
+      f"(slots=4, continuous refill)")
+assert done == len(requests)

@@ -1,0 +1,59 @@
+"""Architecture registry: ``--arch <id>`` ids map to config modules here."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (  # noqa: F401
+    KFACConfig,
+    MeshConfig,
+    ModelConfig,
+    RunConfig,
+    ShapeConfig,
+    SHAPES,
+    TrainConfig,
+)
+
+# arch id -> module name
+_ARCH_MODULES: Dict[str, str] = {
+    "yi-34b": "yi_34b",
+    "smollm-135m": "smollm_135m",
+    "gemma2-2b": "gemma2_2b",
+    "llama3.2-1b": "llama3_2_1b",
+    "phi-3-vision-4.2b": "phi3_vision_4_2b",
+    "whisper-small": "whisper_small",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "jamba-1.5-large-398b": "jamba_1_5_large",
+    "rwkv6-7b": "rwkv6_7b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_reduced_config(arch: str) -> ModelConfig:
+    return _module(arch).reduced()
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cells():
+    """All (arch, shape) dry-run cells, including skip annotations."""
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            out.append((arch, sname, sname in cfg.skip_shapes))
+    return out

@@ -1,0 +1,195 @@
+"""Config dataclasses for models, shapes, K-FAC, mesh and training.
+
+Everything in the framework is driven by these frozen dataclasses; the
+per-architecture modules in this package each export a ``CONFIG`` constant
+plus a ``reduced()`` helper used by the CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description (transformer backbone families).
+
+    ``family`` is one of: dense | moe | hybrid | ssm | vlm | audio.
+    """
+
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+
+    # --- attention variants ---
+    attn_free: bool = False           # rwkv6: no attention at all
+    sliding_window: int = 0           # gemma2: local window size for odd layers
+    alt_local_global: bool = False    # gemma2: alternate local/global attention
+    logit_softcap: float = 0.0        # gemma2 final-logit soft cap
+    attn_softcap: float = 0.0         # gemma2 attention-score soft cap
+    rope_theta: float = 10_000.0
+    use_qk_norm: bool = False
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1                # MoE layer every N layers (others dense)
+    moe_shared_expert: bool = False   # llama4-style shared expert alongside routed
+
+    # --- hybrid (jamba) / ssm ---
+    attn_every: int = 0               # jamba: 1 attention layer per this many
+    ssm_state_dim: int = 16
+    ssm_conv_dim: int = 4
+    ssm_expand: int = 2
+
+    # --- rwkv6 ---
+    rwkv_head_dim: int = 64
+
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0           # >0 -> enc-dec; n_layers = decoder layers
+    encoder_seq: int = 1500           # number of (stubbed) audio frames
+
+    # --- modality frontend stubs ---
+    frontend: str = "none"            # none | patch | audio
+    frontend_tokens: int = 0          # patch/frame count supplied by input_specs
+
+    # --- misc ---
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    max_seq: int = 540_672
+
+    # which shapes this arch supports (subset of SHAPES keys)
+    skip_shapes: Tuple[str, ...] = ()
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.hd
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.hd
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.n_experts == 0:
+            return False
+        return (i % self.moe_every) == (self.moe_every - 1)
+
+    def is_attn_layer(self, i: int) -> bool:
+        """For hybrid archs, whether layer i is attention (else Mamba)."""
+        if self.attn_free:
+            return False
+        if self.attn_every <= 1:
+            return True
+        # jamba: one attention layer per `attn_every` block, in the middle
+        return (i % self.attn_every) == (self.attn_every // 2)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+# The assigned LM shape set; every (arch x shape) cell is well defined.
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class KFACConfig:
+    """The paper's optimizer hyper-parameters (section references in brackets)."""
+
+    inv_mode: str = "blkdiag"         # blkdiag | tridiag      [S4.2 / S4.3]
+    inverse_method: str = "ns"        # ns | eigh | solve      [S8 / App B]
+    ns_iters: int = 12                # Newton-Schulz iterations (cold start)
+    ns_hot_iters: int = 4             # when hot-started from previous inverse
+
+    lambda_init: float = 150.0        # LM damping initial value  [S6.5]
+    eta: float = 1e-5                 # l2 regularization coefficient [S13]
+    t1: int = 5                       # lambda adaptation period  [S6.5]
+    t2: int = 20                      # gamma adaptation period   [S6.6]
+    t3: int = 20                      # inverse recompute period  [S8]
+    omega1_base: float = 19.0 / 20.0  # lambda decay base         [S6.5]
+    omega2_base: float = 19.0 / 20.0  # gamma decay base (sqrt)   [S6.6]
+
+    decay_cap: float = 0.95           # epsilon = min(1 - 1/k, cap) [S5]
+    tau1: float = 1.0                 # stats subsample fraction  [S8]
+    tau2: float = 1.0                 # exact-F subsample fraction [S8]
+
+    use_momentum: bool = True         # (alpha, mu) from exact-F 2x2 solve [S7]
+    use_rescale: bool = True          # exact-F alpha rescale     [S6.4]
+    fixed_lr: float = 0.05            # used only when use_rescale=False
+
+    max_factor_dim: int = 8_192       # local dims above this -> diagonal factor
+    factor_dtype: str = "float32"
+    stats_period: int = 1             # update stats every N steps
+    staggered_inverse: bool = False   # round-robin layer refresh (beyond-paper)
+    damping_floor: float = 1e-8
+
+    def replace(self, **kw) -> "KFACConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    data: int = 16
+    model: int = 16
+    pod: int = 1
+
+    @property
+    def axes(self):
+        if self.pod > 1:
+            return ("pod", "data", "model")
+        return ("data", "model")
+
+    @property
+    def shape(self):
+        if self.pod > 1:
+            return (self.pod, self.data, self.model)
+        return (self.data, self.model)
+
+    @property
+    def n_devices(self):
+        return self.pod * self.data * self.model
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 200
+    seed: int = 0
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: str = "block"              # none | block (per-layer remat policy)
+    grad_accum: int = 1
+    checkpoint_every: int = 100
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    log_every: int = 10
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    kfac: KFACConfig = field(default_factory=KFACConfig)
+    mesh: MeshConfig = field(default_factory=MeshConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)

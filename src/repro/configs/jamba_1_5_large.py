@@ -1,0 +1,31 @@
+"""jamba-1.5-large-398b [hybrid]: Mamba+attn 1:7 interleave, MoE 16e top-2.
+[arXiv:2403.19887; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    n_experts=16,
+    top_k=2,
+    moe_every=2,                  # MoE every other layer (jamba layout)
+    attn_every=8,                 # 1 attention layer per 8 (1:7 mamba:attn)
+    ssm_state_dim=16,
+    ssm_conv_dim=4,
+    ssm_expand=2,
+    # hybrid: attention layers are O(cache) at decode; mamba O(1) -> long OK
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="jamba-reduced", n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=256, n_experts=4, top_k=2,
+        attn_every=2, ssm_state_dim=4, ssm_conv_dim=2,
+    )

@@ -1,0 +1,30 @@
+"""phi-3-vision-4.2b [vlm]: phi3-mini backbone + CLIP frontend (stubbed).
+[hf:microsoft/Phi-3-vision-128k-instruct; hf]
+
+The transformer BACKBONE only; the vision frontend is a STUB — input_specs()
+provides precomputed patch embeddings which are fused (early fusion) with the
+token embeddings.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=96,
+    d_ff=8192,
+    vocab_size=32064,
+    frontend="patch",
+    frontend_tokens=576,          # 24x24 CLIP patch grid
+    skip_shapes=("long_500k",),
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="phi-3-vision-4.2b-reduced", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, head_dim=16, d_ff=128, vocab_size=256, frontend_tokens=8,
+    )

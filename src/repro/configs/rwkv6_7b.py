@@ -1,0 +1,24 @@
+"""rwkv6-7b [ssm]: Finch — attention-free, data-dependent decay.
+[arXiv:2404.05892; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,                   # rwkv time-mix heads (d_model / rwkv_head_dim)
+    n_kv_heads=64,
+    d_ff=14336,
+    vocab_size=65536,
+    attn_free=True,
+    rwkv_head_dim=64,
+    # recurrent: O(1) state per decoded token -> long_500k runs
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="rwkv6-reduced", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=256, rwkv_head_dim=16,
+    )

@@ -1,0 +1,32 @@
+"""whisper-small [audio]: enc-dec, conv frontend (stub).  [arXiv:2212.04356; unverified]
+
+Backbone only: the conv/mel frontend is a STUB — input_specs() provides
+precomputed frame embeddings of shape (batch, encoder_seq, d_model).
+n_layers counts decoder layers; encoder_layers the (full-attention) encoder.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    n_layers=12,
+    encoder_layers=12,
+    encoder_seq=1500,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    frontend="audio",
+    frontend_tokens=1500,
+    skip_shapes=("long_500k",),
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="whisper-small-reduced", n_layers=2, encoder_layers=2,
+        encoder_seq=16, d_model=48, n_heads=3, n_kv_heads=3, head_dim=16,
+        d_ff=96, vocab_size=256, frontend_tokens=16,
+    )

@@ -1,0 +1,180 @@
+"""Kronecker factor statistics (paper S3, S5).
+
+Per tagged layer we maintain running estimates of
+``Ā = E[ā āᵀ]`` (input second moments) and ``G = E[g gᵀ]`` (pre-activation
+gradient second moments under the model's predictive distribution), blended
+with the paper's exponentially-decayed scheme ``ε = min(1 − 1/k, ε_max)``.
+
+Normalization: every contribution is a raw outer-product **sum**; it is
+divided by the *global* token count N of the step.  For MoE expert factors
+this bakes the routing probability into the factor (the Fisher is an
+expectation over all tokens of the actually-executed compute), so rarely-hit
+experts get small factors and the damping floor dominates — the
+mathematically consistent treatment.
+
+Factor storage layouts by (kind):
+  full : (*lead, d, d)          lead = (n_stack?, n_expert?)
+  block: (*lead, nb, db, db)    TP/block-diagonal approximation (DESIGN §3)
+  diag : (*lead, d)             vocab-sized dims (embed A, head G)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tags import LayerMeta
+
+
+# ---------------------------------------------------------------------------
+# layout decisions
+# ---------------------------------------------------------------------------
+
+def factor_layout(dim: int, sharded: bool, tp: int, max_dim: int):
+    """Return (kind, blocks) for a factor side of width ``dim``."""
+    blocks = 1
+    if sharded and tp > 1 and dim % tp == 0:
+        blocks = tp
+    while dim // blocks > max_dim:
+        nxt = blocks * 2
+        while dim % nxt and nxt <= dim:
+            nxt += blocks
+        if nxt > dim:
+            return "diag", 1
+        blocks = nxt
+    return ("block", blocks) if blocks > 1 else ("full", 1)
+
+
+def factor_shape(dim: int, kind: str, blocks: int, lead=()):
+    if kind == "diag":
+        return (*lead, dim)
+    if kind == "block":
+        return (*lead, blocks, dim // blocks, dim // blocks)
+    return (*lead, dim, dim)
+
+
+# ---------------------------------------------------------------------------
+# contraction (called inside the model forward for A, and on the probe
+# cotangents for G). All inputs are stop-gradient'ed by the caller.
+# ---------------------------------------------------------------------------
+
+def outer_sum(x, kind: str, blocks: int, expert: bool = False):
+    """Sum of outer products over every batch-ish dim.
+
+    x: (..., d) for dense; (B, E, C, d) for expert layers.
+    Returns (d,d) / (nb,db,db) / (d,) — with a leading (E,) if expert.
+    Inputs stay in their compute dtype; the MXU accumulates in f32
+    (preferred_element_type), so no f32 copy of the activations is made.
+    """
+    ein = lambda s, a, b: jnp.einsum(s, a, b,
+                                     preferred_element_type=jnp.float32)
+    d = x.shape[-1]
+    if expert:
+        b, e, c, _ = x.shape
+        if kind == "diag":
+            return ein("becd,becd->ed", x, x)
+        if kind == "block":
+            xr = x.reshape(b, e, c, blocks, d // blocks)
+            return ein("becni,becnj->enij", xr, xr)
+        return ein("beci,becj->eij", x, x)
+    xf = x.reshape(-1, d)
+    if kind == "diag":
+        return ein("nd,nd->d", xf, xf)
+    if kind == "block":
+        xr = xf.reshape(-1, blocks, d // blocks)
+        return ein("nbd,nbe->bde", xr, xr)
+    return ein("nd,ne->de", xf, xf)
+
+
+def embed_diag_counts(ids, mask, vocab: int):
+    """Diagonal Ā for an embedding: token frequencies (sum, not normalized)."""
+    flat = ids.reshape(-1)
+    w = mask.reshape(-1).astype(jnp.float32)
+    return jnp.zeros((vocab,), jnp.float32).at[flat].add(w)
+
+
+# ---------------------------------------------------------------------------
+# running state
+# ---------------------------------------------------------------------------
+
+def init_factor_state(metas: Dict[str, LayerMeta]) -> Dict[str, Any]:
+    out = {}
+    for name, m in metas.items():
+        lead = ()
+        if m.n_stack:
+            lead += (m.n_stack,)
+        if m.n_expert:
+            lead += (m.n_expert,)
+        out[name] = {
+            "a": jnp.zeros(factor_shape(m.a_dim, m.a_kind, m.a_blocks, lead),
+                           jnp.float32),
+            "g": jnp.zeros(factor_shape(m.g_dim, m.g_kind, m.g_blocks, lead),
+                           jnp.float32),
+        }
+    return out
+
+
+def decay_eps(k, cap: float):
+    """Paper S5: ε = min(1 − 1/k, cap); k is the 1-based stats update count."""
+    kf = jnp.maximum(k.astype(jnp.float32), 1.0)
+    return jnp.minimum(1.0 - 1.0 / kf, cap)
+
+
+def blend(old, new, eps):
+    return jax.tree.map(lambda o, n: eps * o + (1.0 - eps) * n, old, new)
+
+
+def factor_specs(metas: Dict[str, LayerMeta], mesh) -> Dict[str, Any]:
+    """Storage shardings for the factor/inverse state.
+
+    Stacked/expert/block lead dims go over `model` where aligned; the first
+    matrix dim is FSDP-sharded over `data` when divisible, so the ~d² factor
+    state is spread over the whole pod rather than replicated.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.utils.sharding import pick_shard
+
+    def one(meta: LayerMeta, dim, kind, blocks, side):
+        lead = []
+        if meta.n_stack:
+            lead.append(None)
+        if meta.n_expert:
+            lead.append(pick_shard(meta.n_expert, mesh, "model"))
+        if kind == "diag":
+            return P(*lead, pick_shard(dim, mesh, "data"))
+        if kind == "block":
+            return P(*lead, pick_shard(blocks, mesh, "model"),
+                     pick_shard(dim // blocks, mesh, "data"), None)
+        # full factors: shard the dim that CONTRACTS against the grad matrix
+        # during preconditioning (A: columns, einsum ...ij,...jk; G: rows,
+        # einsum ...jk with V's d_out) so U = A⁻¹ V G⁻¹ needs no gathers —
+        # just a small partial-sum all-reduce.
+        if side == "a":
+            return P(*lead, None, pick_shard(dim, mesh, "data"))
+        return P(*lead, pick_shard(dim, mesh, "data"), None)
+
+    out = {}
+    for name, m in metas.items():
+        out[name] = {"a": one(m, m.a_dim, m.a_kind, m.a_blocks, "a"),
+                     "g": one(m, m.g_dim, m.g_kind, m.g_blocks, "g")}
+    return out
+
+
+def g_from_cotangent(cot, meta: LayerMeta, n_norm: int):
+    """G contribution from probe cotangents of the (1/N)-normalized sampled
+    loss: per-token g = N * cot, and G = (1/N) Σ g gᵀ = N Σ cot cotᵀ."""
+    cot = jax.lax.stop_gradient(cot)
+    if meta.n_stack:
+        fn = lambda c: outer_sum(c, meta.g_kind, meta.g_blocks,
+                                 expert=meta.kind == "expert")
+        s = jax.vmap(fn)(cot)
+    else:
+        s = outer_sum(cot, meta.g_kind, meta.g_blocks,
+                      expert=meta.kind == "expert")
+    return s * float(n_norm)
+
+
+def a_from_record(rec, meta: LayerMeta, n_norm: int):
+    """Normalize the in-forward A contraction (already summed) by N."""
+    return rec / float(n_norm)

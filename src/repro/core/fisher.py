@@ -1,0 +1,106 @@
+"""Exact Fisher quadratic forms via J-products (paper S6.4, S7, Appendix C).
+
+The re-scaling / momentum coefficients need ``δᵢᵀ F δⱼ`` with the *exact*
+minibatch Fisher ``F = E[Jᵀ F_R J]``.  Appendix C's trick: compute ``J δ``
+once per direction (half the cost of a full Fisher-vector product) and
+contract through ``F_R`` analytically:
+
+  categorical:  vᵀFv = Σ_tok [ Σ_c p_c ż_c² − (Σ_c p_c ż_c)² ]
+  bernoulli:    vᵀFv = Σ     p(1−p) ż²
+  gaussian:     vᵀFv = Σ     ż²
+
+``jax.linearize`` shares one forward pass across all m directions; for LMs
+the vocab contraction is chunked so full (N, V) J-products are never
+materialized.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.head import _pick_chunk
+from repro.models.layers import softcap
+
+
+def _pair_indices(m: int):
+    return [(i, j) for i in range(m) for j in range(i, m)]
+
+
+def quad_lm(model, params, batch, tangents: List, chunk_target: int = 2048):
+    """(m, m) matrix of δᵢᵀ F δⱼ for an LM (normalized like the mean loss)."""
+    m = len(tangents)
+
+    def hidden_fn(p):
+        h, _, _ = model.hidden(p, batch)
+        return h
+
+    h, lin = jax.linearize(hidden_fn, params)
+    hdots = [lin(t) for t in tangents]
+
+    w = model.head_weight(params)
+    if model.cfg.tie_embeddings:
+        wdots = [t["embed"].T for t in tangents]
+    else:
+        wdots = [t["head"] for t in tangents]
+
+    bsz, t, d = h.shape
+    n = bsz * t
+    mask = batch.get("mask", jnp.ones(batch["labels"].shape, jnp.float32))
+    if model.cfg.frontend == "patch":
+        p_len = h.shape[1] - batch["labels"].shape[1]
+        mask = jnp.concatenate(
+            [jnp.zeros((bsz, p_len), jnp.float32), mask], axis=1)
+
+    chunk = _pick_chunk(t, 128)
+    nc = t // chunk
+    cap = model.cfg.logit_softcap
+
+    hdf = jnp.stack(hdots)                                    # (m, B, T, d)
+    wdf = jnp.stack([x.astype(jnp.float32) for x in wdots])   # (m, d, V)
+    wf = w.astype(jnp.float32)
+
+    def body(acc, xs):
+        hc, hdc, mc = xs                    # (B,c,d),(m,B,c,d),(B,c)
+        z = jnp.einsum("bcd,dv->bcv", hc.astype(jnp.float32), wf)
+        zd = (jnp.einsum("mbcd,dv->mbcv", hdc.astype(jnp.float32), wf)
+              + jnp.einsum("bcd,mdv->mbcv", hc.astype(jnp.float32), wdf))
+        if cap:
+            sech2 = 1.0 - jnp.tanh(z / cap) ** 2
+            zd = zd * sech2[None]
+            z = softcap(z, cap)
+        p = jax.nn.softmax(z, axis=-1)
+        pz = jnp.einsum("bcv,mbcv->mbc", p, zd)               # Σ p ż
+        pzz = jnp.einsum("bcv,mbcv,kbcv->mkbc", p, zd, zd)    # Σ p żᵢ żⱼ
+        q = (jnp.einsum("mkbc,bc->mk", pzz, mc)
+             - jnp.einsum("mbc,kbc,bc->mk", pz, pz, mc))
+        return acc + q, None
+
+    xs = (h.reshape(bsz, nc, chunk, d).swapaxes(0, 1),
+          hdf.reshape(m, bsz, nc, chunk, d).transpose(2, 0, 1, 3, 4),
+          mask.astype(jnp.float32).reshape(bsz, nc, chunk).swapaxes(0, 1))
+    acc, _ = jax.lax.scan(jax.checkpoint(body),
+                          jnp.zeros((m, m), jnp.float32), xs)
+    return acc / n
+
+
+def quad_logits(logits_fn, params, batch, tangents: List, family: str):
+    """(m, m) quadratic for small-output models (MLP autoencoders)."""
+    z, lin = jax.linearize(logits_fn, params)
+    zds = jnp.stack([lin(t) for t in tangents])               # (m, B, O)
+    z = z.astype(jnp.float32)
+    zds = zds.astype(jnp.float32)
+    n = z.shape[0]
+    if family == "categorical":
+        p = jax.nn.softmax(z, axis=-1)
+        pz = jnp.einsum("no,mno->mn", p, zds)
+        q = jnp.einsum("no,mno,kno->mk", p, zds, zds) - jnp.einsum(
+            "mn,kn->mk", pz, pz)
+    elif family == "bernoulli":
+        p = jax.nn.sigmoid(z)
+        r = p * (1.0 - p)
+        q = jnp.einsum("no,mno,kno->mk", r, zds, zds)
+    else:                                                     # gaussian
+        q = jnp.einsum("mno,kno->mk", zds, zds)
+    return q / n

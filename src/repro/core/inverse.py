@@ -1,0 +1,150 @@
+"""Structured Fisher-block inverses + factored Tikhonov damping (S4.2, S6.3).
+
+Damping (paper eqn. 7): each block's factors are damped as
+``(Ā + π γ I) ⊗ (G + γ/π I)`` with the trace-norm choice
+``π = sqrt( (tr Ā / d_A) / (tr G / d_G) )``.
+
+Inversion methods:
+  * ``eigh``  — exact symmetric eigendecomposition (fallback / reference)
+  * ``ns``    — Newton–Schulz matmul-only iteration (MXU-native; the paper's
+                own S8 pointer to Pan & Schreiber 1991), hot-startable from
+                the previous inverse
+  * ``solve`` — (used only in tests) dense jnp.linalg.inv
+
+All routines are batched over arbitrary leading dims (layer stacks, experts,
+TP blocks) — inverses of stacked factors are one batched kernel.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tags import LayerMeta
+
+_TINY = 1e-20
+
+
+# ---------------------------------------------------------------------------
+# traces / pi
+# ---------------------------------------------------------------------------
+
+def factor_trace(arr, kind: str):
+    """Total trace per (stack/expert) index. Returns shape = lead dims."""
+    if kind == "diag":
+        return jnp.sum(arr, axis=-1)
+    tr = jnp.trace(arr, axis1=-2, axis2=-1)
+    if kind == "block":
+        tr = jnp.sum(tr, axis=-1)          # sum over the block axis
+    return tr
+
+
+def pi_trace(a, a_kind, a_dim, g, g_kind, g_dim):
+    """Paper S6.3 trace-norm pi, batched over lead dims."""
+    a_tr = factor_trace(a, a_kind) / a_dim
+    g_tr = factor_trace(g, g_kind) / g_dim
+    return jnp.sqrt(jnp.maximum(a_tr, _TINY) / jnp.maximum(g_tr, _TINY))
+
+
+# ---------------------------------------------------------------------------
+# damped inverse of one factor
+# ---------------------------------------------------------------------------
+
+def _add_damp(arr, kind: str, damp):
+    """damp has the lead-dims shape (no block axis)."""
+    if kind == "diag":
+        return arr + damp[..., None]
+    d = arr.shape[-1]
+    eye = jnp.eye(d, dtype=arr.dtype)
+    if kind == "block":
+        return arr + damp[..., None, None, None] * eye
+    return arr + damp[..., None, None] * eye
+
+
+def eigh_inverse(m, floor: float = 1e-12):
+    w, v = jnp.linalg.eigh(m)
+    wi = 1.0 / jnp.maximum(w, floor)
+    return jnp.einsum("...ij,...j,...kj->...ik", v, wi, v)
+
+
+def ns_inverse(m, iters: int, x0=None):
+    """Newton–Schulz: X <- X (2I - M X).  m: (..., d, d) SPD (damped)."""
+    d = m.shape[-1]
+    eye = jnp.eye(d, dtype=m.dtype)
+    lam = jnp.max(jnp.sum(jnp.abs(m), axis=-1), axis=-1)       # >= sigma_max
+    cold = eye / lam[..., None, None]
+    if x0 is None:
+        x = cold
+    else:
+        # safeguard the hot start: ||I - M x0||_inf < 1 required
+        r = eye - m @ x0
+        bad = jnp.max(jnp.sum(jnp.abs(r), axis=-1), axis=-1) >= 1.0
+        x = jnp.where(bad[..., None, None], cold, x0)
+
+    def body(_, x):
+        return x @ (2.0 * eye - m @ x)
+
+    x = jax.lax.fori_loop(0, iters, body, x)
+    return 0.5 * (x + jnp.swapaxes(x, -1, -2))
+
+
+def factor_inverse(arr, kind: str, damp, *, method: str = "eigh",
+                   iters: int = 12, prev=None):
+    """Inverse of (factor + damp*I); diag kind returns the reciprocal."""
+    arr = _add_damp(arr.astype(jnp.float32), kind, jnp.asarray(damp, jnp.float32))
+    if kind == "diag":
+        return 1.0 / jnp.maximum(arr, _TINY)
+    if method == "eigh":
+        return eigh_inverse(arr)
+    if method == "ns":
+        return ns_inverse(arr, iters, prev)
+    return jnp.linalg.inv(arr)
+
+
+def damped_pair_inverse(meta: LayerMeta, a, g, gamma, *, method="eigh",
+                        iters=12, prev: Optional[Dict] = None):
+    """Both inverses of one layer block under factored Tikhonov damping."""
+    pi = pi_trace(a, meta.a_kind, meta.a_dim, g, meta.g_kind, meta.g_dim)
+    a_inv = factor_inverse(a, meta.a_kind, pi * gamma, method=method,
+                           iters=iters,
+                           prev=None if prev is None else prev.get("a_inv"))
+    g_inv = factor_inverse(g, meta.g_kind, gamma / pi, method=method,
+                           iters=iters,
+                           prev=None if prev is None else prev.get("g_inv"))
+    return {"a_inv": a_inv, "g_inv": g_inv}
+
+
+# ---------------------------------------------------------------------------
+# preconditioning:  U = Ā⁻¹ V G⁻¹   (V stored (d_in[, +1], d_out) like W)
+# ---------------------------------------------------------------------------
+
+def _mul_left(inv, kind: str, v):
+    """Multiply along the d_in (second-to-last) axis of v."""
+    if kind == "diag":
+        return v * inv[..., :, None]
+    if kind == "block":
+        nb, db = inv.shape[-3], inv.shape[-1]
+        lead = v.shape[:-2]
+        vr = v.reshape(*lead, nb, db, v.shape[-1])
+        out = jnp.einsum("...nij,...njk->...nik", inv, vr)
+        return out.reshape(*lead, nb * db, v.shape[-1])
+    return jnp.einsum("...ij,...jk->...ik", inv, v)
+
+
+def _mul_right(inv, kind: str, v):
+    """Multiply along the d_out (last) axis of v."""
+    if kind == "diag":
+        return v * inv[..., None, :]
+    if kind == "block":
+        nb, db = inv.shape[-3], inv.shape[-1]
+        vr = v.reshape(*v.shape[:-1], nb, db)        # (..., d_in, nb, db)
+        out = jnp.einsum("...inj,...njk->...ink", vr, inv)
+        return out.reshape(*v.shape)
+    return jnp.einsum("...ij,...jk->...ik", v, inv)
+
+
+def apply_block_inverse(meta: LayerMeta, inv: Dict, v):
+    """U = Ā⁻¹ V G⁻¹ with per-kind structure; v shaped like the weight."""
+    u = _mul_left(inv["a_inv"], meta.a_kind, v.astype(jnp.float32))
+    return _mul_right(inv["g_inv"], meta.g_kind, u)

@@ -1,0 +1,118 @@
+"""Curvature tagging: how models expose per-layer (ā, g) pairs to K-FAC.
+
+The paper needs, for every layer ``s = ā W``, the input activations ``ā`` and
+the pre-activation gradients ``g = dL/ds`` **per example** (S3, S5).  In JAX we
+get per-example g's with the *zero-probe* trick: the forward computes
+``s = ā W + p`` where ``p`` is an all-zeros array shaped like ``s`` that is an
+explicit argument of the differentiated function.  ``grad`` w.r.t. ``p`` is
+exactly ``dL/ds`` with per-example resolution, and it rides the same backward
+pass that produces the parameter gradients.
+
+Layers are described by :class:`LayerMeta`; models return a dict of recorded
+activations via the :class:`Tagger` threaded through their forward pass.
+
+Scan-stacked layers (the transformer blocks are `lax.scan`-ed over stacked
+parameters) record activations as scan outputs, so every recorded array (and
+every probe) carries a leading ``n_stack`` dimension.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+
+@dataclass(frozen=True)
+class LayerMeta:
+    """Static description of one K-FAC-tagged linear map."""
+
+    name: str
+    param_path: Tuple[Any, ...]     # path into the params pytree -> weight
+    d_in: int
+    d_out: int
+    kind: str = "dense"             # dense | expert | embed
+    n_stack: int = 0                # >0: leading scan-stack dim on weight/factors
+    n_expert: int = 0               # >0: per-expert factors (kind == "expert")
+    a_kind: str = "full"            # full | diag | block
+    g_kind: str = "full"            # full | diag | block
+    a_blocks: int = 1               # block count when a_kind == "block"
+    g_blocks: int = 1
+    has_bias: bool = False          # homogeneous coordinate appended to ā
+    probe_tshard: bool = False      # context-parallel outputs: probe shards
+                                    # the sequence dim (not the feature dim)
+
+    @property
+    def a_dim(self) -> int:
+        return self.d_in + (1 if self.has_bias else 0)
+
+    @property
+    def g_dim(self) -> int:
+        return self.d_out
+
+
+class Tagger:
+    """Forward-pass context. Modes:
+
+    * ``plain``   — inference; tags are no-ops.
+    * ``shapes``  — record the pre-activation arrays themselves (used under
+      ``jax.eval_shape`` to discover probe shapes; never executed for real).
+    * ``collect`` — add probes, record activations (the stats pass).
+    """
+
+    def __init__(self, mode: str = "plain", probes: Optional[Dict[str, Any]] = None,
+                 contract: Optional[Dict[str, Any]] = None):
+        assert mode in ("plain", "shapes", "collect")
+        self.mode = mode
+        self.probes = probes or {}
+        # name -> callable(a) -> contracted A-side outer-product sum; when a
+        # tag has an entry, only the (tiny) contraction is recorded instead of
+        # the raw activations.
+        self.contract = contract or {}
+        self.records: Dict[str, Any] = {}
+
+    def tag(self, name: str, a, s, weight=None):
+        """Tag a dense map: ``a`` inputs (..., d_in), ``s`` outputs (..., d_out).
+
+        ``weight``: optional per-position weights (MoE slot mask) with shape
+        ``s.shape[:-1]``. Returns ``s`` (plus probe in collect mode).
+        """
+        if self.mode == "plain":
+            return s
+        if self.mode == "shapes":
+            self.records[name] = s
+            return s
+        # collect
+        fn = self.contract.get(name)
+        a_sg = jax.lax.stop_gradient(a)
+        rec = {"aa": fn(a_sg)} if fn is not None else {"a": a_sg}
+        self.records[name] = rec
+        if name in self.probes:
+            s = s + self.probes[name]
+        return s
+
+    def tag_embed(self, name: str, ids, s):
+        """Tag an embedding lookup: ``ids`` int tokens, ``s`` embeddings."""
+        if self.mode == "plain":
+            return s
+        if self.mode == "shapes":
+            self.records[name] = s
+            return s
+        self.records[name] = {"ids": ids}
+        if name in self.probes:
+            s = s + self.probes[name]
+        return s
+
+    def out(self) -> Dict[str, Any]:
+        """Records to be returned (e.g. as scan ys)."""
+        return self.records
+
+
+def merge_records(*records: Dict[str, Any]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for r in records:
+        for k, v in r.items():
+            if k in out:
+                raise ValueError(f"duplicate K-FAC tag {k!r}")
+            out[k] = v
+    return out

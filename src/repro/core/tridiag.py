@@ -1,0 +1,139 @@
+"""Block-tridiagonal inverse approximation F̂⁻¹ = Ξᵀ Λ Ξ (paper S4.3, App B).
+
+Defined for *chain* models (the paper's MLPs — see DESIGN §Arch-applicability
+for why the transformer DAG uses the block-diagonal approximation instead).
+
+Needs cross moments between consecutive layers:
+  Ā_{i,i+1} = E[ā_i ā_{i+1}ᵀ]   (inputs of consecutive tagged layers)
+  G_{i,i+1} = E[g_i g_{i+1}ᵀ]
+
+and per-layer damped diagonal factors.  Matrix layout note: the Fisher block
+acts on vec(DW) with DW = g āᵀ of shape (d_out, d_in+1); internally we work
+in that layout and transpose to/from the (d_in+1, d_out) weight layout.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.inverse import eigh_inverse, pi_trace
+
+_EPS = 1e-8
+
+
+def _inv_sqrt(m, floor=1e-10):
+    w, v = jnp.linalg.eigh(m)
+    wi = jax.lax.rsqrt(jnp.maximum(w, floor))
+    return jnp.einsum("ij,j,kj->ik", v, wi, v)
+
+
+# ---------------------------------------------------------------------------
+# statistics
+# ---------------------------------------------------------------------------
+
+def init_cross_state(model) -> Dict[str, jnp.ndarray]:
+    order = model.layer_order
+    metas = model.metas
+    out = {}
+    for i in range(len(order) - 1):
+        mi, mj = metas[order[i]], metas[order[i + 1]]
+        out[f"a{i}"] = jnp.zeros((mi.a_dim, mj.a_dim), jnp.float32)
+        out[f"g{i}"] = jnp.zeros((mi.g_dim, mj.g_dim), jnp.float32)
+    return out
+
+
+def cross_contrib(model, recs, gprobes, n: int) -> Dict[str, jnp.ndarray]:
+    order = model.layer_order
+    out = {}
+    for i in range(len(order) - 1):
+        ai = recs[order[i]]["a"].astype(jnp.float32)
+        aj = recs[order[i + 1]]["a"].astype(jnp.float32)
+        out[f"a{i}"] = jnp.einsum("ni,nj->ij", ai, aj) / n
+        gi = jax.lax.stop_gradient(gprobes[order[i]]).astype(jnp.float32)
+        gj = jax.lax.stop_gradient(gprobes[order[i + 1]]).astype(jnp.float32)
+        # per-token g = n * cot  =>  E[g_i g_jᵀ] = n Σ cot_i cot_jᵀ
+        out[f"g{i}"] = jnp.einsum("ni,nj->ij", gi, gj) * n
+    return out
+
+
+# ---------------------------------------------------------------------------
+# inverse precomputation (every T3 steps)
+# ---------------------------------------------------------------------------
+
+def precompute(model, factors, gamma, eta) -> Dict:
+    """Damped Ψ / Σ cached quantities (paper S4.3 with S6.3 damping)."""
+    order = model.layer_order
+    metas = model.metas
+    ell = len(order)
+    cross = factors["__cross__"]
+
+    a_d, g_d = [], []
+    for name in order:
+        m = metas[name]
+        a = factors[name]["a"].astype(jnp.float32)
+        g = factors[name]["g"].astype(jnp.float32)
+        pi = pi_trace(a, m.a_kind, m.a_dim, g, m.g_kind, m.g_dim)
+        a_d.append(a + (pi * gamma) * jnp.eye(a.shape[-1]))
+        g_d.append(g + (gamma / pi) * jnp.eye(g.shape[-1]))
+
+    psi_a, psi_g, appb = [], [], []
+    for i in range(ell - 1):
+        a_cross = cross[f"a{i}"]
+        g_cross = cross[f"g{i}"]
+        pa = a_cross @ eigh_inverse(a_d[i + 1])          # Ψ^Ā_{i,i+1}
+        pg = g_cross @ eigh_inverse(g_d[i + 1])          # Ψ^G_{i,i+1}
+        psi_a.append(pa)
+        psi_g.append(pg)
+        # Σ_{i|i+1} = A_i ⊗ B_i − C ⊗ D  (A-side=Ā, B-side=G)
+        a_mat = a_d[i]
+        b_mat = g_d[i]
+        c_mat = pa @ a_d[i + 1] @ pa.T
+        d_mat = pg @ g_d[i + 1] @ pg.T
+        a_is = _inv_sqrt(a_mat)
+        b_is = _inv_sqrt(b_mat)
+        s1, e1 = jnp.linalg.eigh(a_is @ c_mat @ a_is)
+        s2, e2 = jnp.linalg.eigh(b_is @ d_mat @ b_is)
+        appb.append({"k1": a_is @ e1, "k2": b_is @ e2,
+                     "s1": s1, "s2": s2})
+    last = {"a_inv": eigh_inverse(a_d[-1]), "g_inv": eigh_inverse(g_d[-1])}
+    return {"psi_a": psi_a, "psi_g": psi_g, "appb": appb, "last": last}
+
+
+# ---------------------------------------------------------------------------
+# application: U = F̂⁻¹ V  (paper S4.3)
+# ---------------------------------------------------------------------------
+
+def _sigma_inv_apply(cache, x):
+    """(A⊗B − C⊗D)⁻¹ vec(X) per Appendix B; X in (B-side, A-side) layout."""
+    k1, k2, s1, s2 = cache["k1"], cache["k2"], cache["s1"], cache["s2"]
+    inner = k2.T @ x @ k1
+    denom = 1.0 - s2[:, None] * s1[None, :]
+    denom = jnp.where(jnp.abs(denom) < _EPS, _EPS, denom)
+    return k2 @ (inner / denom) @ k1.T
+
+
+def apply(model, tri, vs: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    order = model.layer_order
+    ell = len(order)
+    # to Fisher layout: X_i = V_iᵀ  (d_out, d_in+1)
+    xs = [vs[name].astype(jnp.float32).T for name in order]
+
+    # u = Ξ v   (U_i = X_i − Ψ^G_i X_{i+1} Ψ^Āᵢᵀ ; U_{ℓ-1} = X_{ℓ-1})
+    us = list(xs)
+    for i in range(ell - 1):
+        us[i] = xs[i] - tri["psi_g"][i] @ xs[i + 1] @ tri["psi_a"][i].T
+
+    # y = Λ u
+    ys = []
+    for i in range(ell - 1):
+        ys.append(_sigma_inv_apply(tri["appb"][i], us[i]))
+    ys.append(tri["last"]["g_inv"] @ us[-1] @ tri["last"]["a_inv"])
+
+    # z = Ξᵀ y  (Z_i = Y_i − Ψ^G_{i-1}ᵀ Y_{i-1} Ψ^Ā_{i-1} ; Z_0 = Y_0)
+    zs = list(ys)
+    for i in range(1, ell):
+        zs[i] = ys[i] - tri["psi_g"][i - 1].T @ ys[i - 1] @ tri["psi_a"][i - 1]
+
+    return {name: zs[i].T for i, name in enumerate(order)}

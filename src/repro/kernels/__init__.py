@@ -1,0 +1,11 @@
+# Pallas TPU kernels for K-FAC's compute hot-spots (paper S8 cost model):
+#   factor_update   — fused decayed symmetric accumulation C <- eps C + s XᵀX
+#   matmul          — tiled MXU matmul with scale/accumulate epilogue
+#   ns_step         — Newton–Schulz inverse iteration X <- X(2I − MX)
+#   precond         — two-sided preconditioning U = Ā⁻¹ V G⁻¹
+#   flash_attention — fwd flash attention (GQA/causal/window/softcap) for the
+#                     model substrate's serving path
+#   flash_decode    — one-token decode vs a long (sequence-sharded) KV cache,
+#                     valid length via scalar prefetch
+# ops.py exposes jit'd wrappers with a pure-jnp fallback; ref.py holds the
+# oracles the tests sweep against (interpret=True on CPU).

@@ -1,0 +1,90 @@
+"""Flash-decode kernel: one query token against a long KV cache.
+
+The serve-side counterpart of the Perf-1 cache layout (EXPERIMENTS §Perf):
+the key axis is the grid's innermost dimension, so on a sequence-sharded
+cache each core streams only its KV slice; the online-softmax scratch
+carries (m, l, acc) across key blocks.  The cache's valid length arrives as
+a scalar-prefetch argument (position masking without recompilation).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, k_steps, bk):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (1, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (1, bk)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    s = jnp.where(k_pos < len_ref[0], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * corr
+                    + jnp.dot(p, v_ref[0, 0].astype(jnp.float32),
+                              preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ik == k_steps - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, length, *, bk: int = 128, interpret: bool = True):
+    """q: (B, Hq, hd) one token; k, v: (B, Hkv, S, hd); length: scalar int32
+    count of valid cache entries.  Returns (B, Hq, hd)."""
+    b, hq, hd = q.shape
+    _, hkv, s_len, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    bk = min(bk, s_len)
+    assert s_len % bk == 0
+    k_steps = s_len // bk
+    grid = (b, hq, k_steps)
+    kernel = functools.partial(_kernel, scale=1.0 / math.sqrt(hd),
+                               k_steps=k_steps, bk=bk)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, hd), lambda bb, h, ik, lens: (bb, h, 0)),
+                pl.BlockSpec((1, 1, bk, hd),
+                             lambda bb, h, ik, lens, g=group: (bb, h // g, ik, 0)),
+                pl.BlockSpec((1, 1, bk, hd),
+                             lambda bb, h, ik, lens, g=group: (bb, h // g, ik, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, hd),
+                                   lambda bb, h, ik, lens: (bb, h, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, hd), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(length, jnp.int32).reshape(1), q, k, v)
+    return out

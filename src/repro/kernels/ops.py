@@ -1,0 +1,90 @@
+"""jit'd dispatch layer over the Pallas kernels.
+
+``use_pallas(True)`` (or REPRO_USE_PALLAS=1) routes the hot ops through the
+kernels — compiled on TPU, interpret-mode on CPU; the default is the pure-jnp
+path, which XLA fuses well on CPU and doubles as the reference
+implementation.  On a real TPU deployment the launcher flips this on.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import flash_decode as _fd
+from repro.kernels import factor_update as _fu
+from repro.kernels import matmul as _mm
+from repro.kernels import ns_step as _ns
+from repro.kernels import precond as _pc
+from repro.kernels import ref as _ref
+
+_STATE = {"use_pallas": os.environ.get("REPRO_USE_PALLAS", "0") == "1",
+          "interpret": jax.default_backend() != "tpu"}
+
+
+def use_pallas(on: bool = True, interpret=None):
+    _STATE["use_pallas"] = on
+    if interpret is not None:
+        _STATE["interpret"] = interpret
+
+
+def enabled() -> bool:
+    return _STATE["use_pallas"]
+
+
+def matmul(a, b, c=None, *, alpha=1.0, beta=0.0):
+    if enabled() and all(s % 8 == 0 for s in (*a.shape, *b.shape)):
+        return _mm.matmul(a, b, c, alpha=alpha, beta=beta,
+                          interpret=_STATE["interpret"])
+    return _ref.matmul_ref(a, b, c, alpha=alpha, beta=beta)
+
+
+def factor_update(x, c, *, alpha, beta):
+    """C <- beta C + alpha XᵀX (the S5 decayed running-average update)."""
+    if enabled() and x.shape[0] % 8 == 0 and x.shape[1] % 8 == 0:
+        return _fu.factor_update(x, c, alpha=alpha, beta=beta,
+                                 interpret=_STATE["interpret"])
+    return _ref.factor_update_ref(x, c, alpha=alpha, beta=beta)
+
+
+def ns_inverse(m, iters: int):
+    if enabled() and m.shape[-1] % 8 == 0 and m.ndim == 2:
+        return _ns.ns_inverse(m, iters, interpret=_STATE["interpret"])
+    return _ref.ns_inverse_ref(m, iters)
+
+
+def precondition(a_inv, v, g_inv):
+    if enabled() and all(s % 8 == 0 for s in v.shape):
+        return _pc.precondition(a_inv, v, g_inv,
+                                interpret=_STATE["interpret"])
+    return _ref.precondition_ref(a_inv, v, g_inv)
+
+
+def flash_decode(q, k, v, length, *, bk=128):
+    """One-token decode vs a long cache: (B,Hq,hd) x (B,Hkv,S,hd)."""
+    if enabled() and k.shape[2] % bk == 0 and q.shape[-1] % 8 == 0:
+        return _fd.flash_decode(q, k, v, length, bk=bk,
+                                interpret=_STATE["interpret"])
+    b, hq, hd = q.shape
+    hkv, s_len = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    sc = jnp.einsum("bhgd,bhsd->bhgs", qg, k.astype(jnp.float32))
+    sc = sc / jnp.sqrt(jnp.float32(hd))
+    sc = jnp.where(jnp.arange(s_len) < length, sc, -1e30)
+    p = jax.nn.softmax(sc, -1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, hd).astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, cap=0.0):
+    """(B, Hq, Tq, hd) x (B, Hkv, Tk, hd) -> (B, Hq, Tq, hd)."""
+    tq, tk, hd = q.shape[2], k.shape[2], q.shape[3]
+    if (enabled() and tq % 8 == 0 and tk % 128 == 0 and hd % 8 == 0):
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   cap=cap, interpret=_STATE["interpret"])
+    return _ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                    cap=cap)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b, c=None, *, alpha=1.0, beta=0.0):
+    out = alpha * (a.astype(jnp.float32) @ b.astype(jnp.float32))
+    if c is not None and beta != 0.0:
+        out = out + beta * c.astype(jnp.float32)
+    return out
+
+
+def factor_update_ref(x, c, *, alpha, beta):
+    x = x.astype(jnp.float32)
+    return alpha * (x.T @ x) + beta * c.astype(jnp.float32)
+
+
+def ns_step_ref(m, x):
+    m = m.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    return x @ (2.0 * jnp.eye(m.shape[-1]) - m @ x)
+
+
+def ns_inverse_ref(m, iters):
+    lam = jnp.max(jnp.sum(jnp.abs(m), axis=-1))
+    x = jnp.eye(m.shape[-1], dtype=jnp.float32) / lam
+    for _ in range(iters):
+        x = ns_step_ref(m, x)
+    return 0.5 * (x + x.T)
+
+
+def precondition_ref(a_inv, v, g_inv):
+    return (a_inv.astype(jnp.float32) @ v.astype(jnp.float32)
+            @ g_inv.astype(jnp.float32))
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0):
+    """q: (B, Hq, Tq, hd); k, v: (B, Hkv, Tk, hd) — plain softmax attention."""
+    b, hq, tq, hd = q.shape
+    hkv, tk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, tq, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    qp = jnp.arange(tq)[:, None]
+    kp = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= qp >= kp
+    if window:
+        mask &= qp - kp < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, tq, hd).astype(q.dtype)

@@ -1,0 +1,227 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (lower succeeds),
+  * the partitioned program compiles (no unsupported collectives),
+  * it fits (memory_analysis), and
+  * the roofline terms are derivable (cost_analysis + HLO collective scan).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k [--multi_pod]
+  python -m repro.launch.dryrun --all [--multi_pod]   # every cell, resumable
+Results land in benchmarks/results/dryrun/<mesh>/<arch>__<shape>.json.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.configs.base import KFACConfig
+from repro.core.kfac import KFAC
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs, train_batch_specs, rng_spec
+from repro.models.lm import LM
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+_COLL_RE = re.compile(
+    r"(\w[\w\.\-]*) = \S+?\s*(all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute)\(")
+_SHAPE_RE = re.compile(r"=\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str):
+    """Per-device bytes moved over links, by collective type.
+
+    Model: ring algorithms — all-gather/reduce-scatter/all-to-all/permute
+    move ~result-size bytes per device; all-reduce ~2x (RS + AG phases).
+    """
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for line in hlo_text.splitlines():
+        mm = _COLL_RE.search(line)
+        if not mm:
+            continue
+        kind = mm.group(2)
+        sm = _SHAPE_RE.search(line)
+        if not sm:
+            continue
+        dt, dims = sm.group(1), sm.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        size = _DTYPE_BYTES[dt]
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        if kind == "reduce-scatter":
+            gm = _GROUP_RE.search(line)
+            if gm:  # result is the scattered shard; ring moves ~input bytes
+                size *= len(gm.group(1).split(","))
+        out[kind] += int(size * factor)
+        out["count"] += 1
+    out["total"] = sum(v for k, v in out.items() if k != "count")
+    return out
+
+
+def _cost_dict(compiled):
+    try:
+        c = compiled.cost_analysis()
+        if isinstance(c, (list, tuple)):
+            c = c[0]
+        return {k: float(v) for k, v in c.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or "utilization" not in k)}
+    except Exception as e:  # noqa: BLE001
+        return {"error": str(e)}
+
+
+def _mem_dict(compiled):
+    try:
+        m = compiled.memory_analysis()
+        if m is None:
+            return {}
+        out = {}
+        for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "temp_size_in_bytes"):
+            if hasattr(m, k):
+                out[k] = int(getattr(m, k))
+        return out
+    except Exception as e:  # noqa: BLE001
+        return {"error": str(e)}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Returns (record, lowered/compiled handles are not kept)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name in cfg.skip_shapes:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "per-assignment skip (see DESIGN.md)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kcfg = KFACConfig()
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": list(mesh.devices.shape), "kind": shape.kind}
+    t0 = time.time()
+
+    if shape.kind == "train":
+        lm = LM(cfg, kcfg, mesh, compute_dtype=jnp.bfloat16, fsdp=True)
+        opt = KFAC(lm, kcfg, mesh)
+        params_abs = lm.abstract_params(jnp.float32)
+        batch_abs = train_batch_specs(cfg, shape, mesh)
+        rng_abs = rng_spec(mesh)
+        state_abs = jax.eval_shape(opt.init, params_abs, batch_abs)
+        state_sh = opt.state_shardings(state_abs, lm.param_shardings(), mesh)
+        state_abs = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            state_abs, state_sh)
+
+        def train_step(state, params, batch, rng):
+            state, grads, metrics = opt.stats_grads(state, params, batch, rng)
+            params, state, um = opt.apply_update(state, params, grads, batch,
+                                                 rng)
+            return params, state
+
+        with mesh:
+            lowered = jax.jit(train_step).lower(state_abs, params_abs,
+                                                batch_abs, rng_abs)
+            compiled = lowered.compile()
+        rec["aux"] = {}
+        # amortized inverse refresh, lowered separately (every T3 steps)
+        with mesh:
+            low_inv = jax.jit(opt.refresh_inverses).lower(state_abs)
+            comp_inv = low_inv.compile()
+        rec["aux"]["refresh_inverses"] = {
+            "cost": _cost_dict(comp_inv),
+            "hlo": hlo_cost.analyze(comp_inv.as_text()),
+        }
+    else:
+        lm = LM(cfg, kcfg, mesh, compute_dtype=jnp.bfloat16, fsdp=False)
+        # huge (MoE) models cannot hold bf16 params model-sharded only at
+        # serve time; fall back to FSDP storage (EP-style serving)
+        if lm.n_params() * 2 > 8e9 * 16:
+            lm = LM(cfg, kcfg, mesh, compute_dtype=jnp.bfloat16, fsdp=True)
+        rec["serve_fsdp"] = lm.fsdp
+        params_abs = lm.abstract_params(jnp.bfloat16)
+        spec = input_specs(lm, shape, mesh)
+        with mesh:
+            if shape.kind == "prefill":
+                lowered = jax.jit(lm.prefill).lower(params_abs, spec["batch"])
+            else:
+                lowered = jax.jit(lm.decode_step).lower(
+                    params_abs, spec["cache"], spec["tokens"], spec["pos"])
+            compiled = lowered.compile()
+
+    rec["cost"] = {k: v for k, v in _cost_dict(compiled).items()
+                   if k in ("flops", "transcendentals")}
+    rec["memory"] = _mem_dict(compiled)
+    # trip-count-aware per-device cost (the roofline source of truth)
+    rec["hlo"] = hlo_cost.analyze(compiled.as_text())
+    rec["collectives"] = rec["hlo"]["collectives"]
+    rec["lower_compile_seconds"] = round(time.time() - t0, 1)
+    return rec
+
+
+def run_cell(arch, shape_name, multi_pod, force=False):
+    sub = "pod512" if multi_pod else "pod256"
+    outdir = RESULTS / sub
+    outdir.mkdir(parents=True, exist_ok=True)
+    fn = outdir / f"{arch.replace('/', '_')}__{shape_name}.json"
+    if fn.exists() and not force:
+        print(f"[dryrun] SKIP (cached) {arch} x {shape_name} [{sub}]")
+        return json.loads(fn.read_text())
+    print(f"[dryrun] {arch} x {shape_name} [{sub}] ...", flush=True)
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod)
+        status = "skipped" if rec.get("skipped") else "ok"
+    except Exception as e:  # noqa: BLE001
+        rec = {"arch": arch, "shape": shape_name, "error": str(e)[-4000:],
+               "traceback": traceback.format_exc()[-8000:]}
+        status = "FAIL"
+    fn.write_text(json.dumps(rec, indent=1))
+    secs = rec.get("lower_compile_seconds", 0)
+    print(f"[dryrun] {status} {arch} x {shape_name} [{sub}] ({secs}s)",
+          flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi_pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                run_cell(arch, shape, args.multi_pod, args.force)
+    else:
+        rec = run_cell(args.arch, args.shape, args.multi_pod, args.force)
+        if "error" in rec:
+            print(rec["traceback"])
+            raise SystemExit(1)
+        print(json.dumps({k: v for k, v in rec.items()
+                          if k != "traceback"}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A function (not a module constant) so importing this module never touches
+jax device state.  Single pod: 16x16 = 256 chips, axes (data, model).
+Multi-pod: 2x16x16 = 512 chips, axes (pod, data, model) — `pod` carries only
+DCN-friendly gradient/statistics reductions; FSDP all-gathers stay on the
+in-pod ICI `data` axis.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever devices exist, as a 1D (data,) mesh — CPU tests/examples."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

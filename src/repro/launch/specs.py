@@ -1,0 +1,71 @@
+"""ShapeDtypeStruct stand-ins for every model input — shardable,
+weak-type-correct, zero device allocation.  The dry-run lowers against
+these; real launchers build identically-sharded concrete arrays."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import params as PM
+from repro.models.lm import LM
+from repro.utils.sharding import axis_size, batch_axes
+
+
+def _sds(shape, dtype, mesh, spec):
+    sharding = NamedSharding(mesh, spec) if mesh is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _batch_spec(mesh, b: int):
+    ba = batch_axes(mesh)
+    if mesh is not None and b % axis_size(mesh, ba) == 0:
+        return P(ba)
+    return P(None)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Dict:
+    b, t = shape.global_batch, shape.seq_len
+    bs = _batch_spec(mesh, b)
+    out = {
+        "tokens": _sds((b, t), jnp.int32, mesh, P(*bs, None)),
+        "labels": _sds((b, t), jnp.int32, mesh, P(*bs, None)),
+    }
+    if cfg.frontend == "patch":
+        out["patches"] = _sds((b, cfg.frontend_tokens, cfg.d_model),
+                              jnp.float32, mesh, P(*bs, None, None))
+    if cfg.frontend == "audio":
+        out["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model),
+                             jnp.float32, mesh, P(*bs, None, None))
+    return out
+
+
+def decode_inputs(model: LM, shape: ShapeConfig, mesh) -> Tuple[Any, Any, Any]:
+    """(cache, tokens, pos) abstract inputs for a serve_step lowering."""
+    b = shape.global_batch
+    cache = PM.abstract(model.cache_defs(b, shape.seq_len), mesh=mesh)
+    bs = _batch_spec(mesh, b)
+    tokens = _sds((b, 1), jnp.int32, mesh, P(*bs, None))
+    pos = _sds((), jnp.int32, mesh, P())
+    return cache, tokens, pos
+
+
+def rng_spec(mesh):
+    return _sds((2,), jnp.uint32, mesh, P())
+
+
+def input_specs(model: LM, shape: ShapeConfig, mesh) -> Dict[str, Any]:
+    """Everything the dry-run needs for one (arch x shape) cell."""
+    cfg = model.cfg
+    if shape.kind == "train":
+        return {"kind": "train",
+                "batch": train_batch_specs(cfg, shape, mesh),
+                "rng": rng_spec(mesh)}
+    if shape.kind == "prefill":
+        return {"kind": "prefill",
+                "batch": train_batch_specs(cfg, shape, mesh)}
+    cache, tokens, pos = decode_inputs(model, shape, mesh)
+    return {"kind": "decode", "cache": cache, "tokens": tokens, "pos": pos}

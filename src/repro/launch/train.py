@@ -1,0 +1,92 @@
+"""Training launcher.
+
+CPU-scale (this container):
+  python -m repro.launch.train --arch llama3.2-1b --reduced --steps 20 \
+      --global_batch 8 --seq 64
+
+TPU-pod scale (real deployment): drop --reduced, pass --mesh production
+[--multi_pod]; the same code paths lower onto the 16x16 / 2x16x16 meshes the
+dry-run validates.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, get_reduced_config
+from repro.configs.base import KFACConfig, TrainConfig
+from repro.core.kfac import KFAC
+from repro.data.pipeline import (SyntheticLMData, make_audio_batch,
+                                 make_vlm_batch)
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models.lm import LM
+from repro.training.checkpoint import Checkpointer
+from repro.training.trainer import Trainer
+
+
+class _ArchData:
+    """Wraps the token pipeline with the arch's modality frontend stubs."""
+
+    def __init__(self, cfg, base):
+        self.cfg, self.base = cfg, base
+
+    def batch(self, step):
+        b = self.base.batch(step)
+        if self.cfg.frontend == "patch":
+            b = make_vlm_batch(b, self.cfg.d_model, self.cfg.frontend_tokens,
+                               self.base.mesh, step)
+        if self.cfg.frontend == "audio":
+            b = make_audio_batch(b, self.cfg.d_model, self.cfg.encoder_seq,
+                                 self.base.mesh, step)
+        return b
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--global_batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--mesh", choices=["none", "local", "production"],
+                    default="none")
+    ap.add_argument("--multi_pod", action="store_true")
+    ap.add_argument("--ckpt_dir", default="")
+    ap.add_argument("--lambda_init", type=float, default=10.0)
+    ap.add_argument("--inv_mode", default="blkdiag")
+    ap.add_argument("--tau1", type=float, default=1.0)
+    args = ap.parse_args(argv)
+
+    cfg = (get_reduced_config(args.arch) if args.reduced
+           else get_config(args.arch))
+    mesh = {"none": None, "local": make_local_mesh(),
+            "production": lambda: make_production_mesh(
+                multi_pod=args.multi_pod)}[args.mesh]
+    if callable(mesh):
+        mesh = mesh()
+
+    kcfg = KFACConfig(lambda_init=args.lambda_init, inv_mode=args.inv_mode,
+                      tau1=args.tau1, t3=5)
+    tcfg = TrainConfig(steps=args.steps,
+                       checkpoint_dir=args.ckpt_dir or "/tmp/repro_ckpt",
+                       checkpoint_every=max(10, args.steps // 2))
+    lm = LM(cfg, kcfg, mesh)
+    opt = KFAC(lm, kcfg, mesh)
+    params = lm.init_params(jax.random.PRNGKey(0))
+    print(f"[train] arch={cfg.name} params={lm.n_params():,}")
+
+    data = _ArchData(cfg, SyntheticLMData(cfg.vocab_size, args.seq,
+                                          args.global_batch, mesh))
+    ckpt = Checkpointer(tcfg.checkpoint_dir) if args.ckpt_dir else None
+    trainer = Trainer(lm, opt, tcfg, mesh, ckpt)
+    result = trainer.fit(params, data, args.steps)
+    hist = result["history"]
+    print(f"[train] done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}"
+          f" in {result['seconds']:.1f}s")
+    return result
+
+
+if __name__ == "__main__":
+    main()

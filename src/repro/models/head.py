@@ -1,0 +1,95 @@
+"""Chunked LM head: CE loss + predictive-distribution sampling + head stats.
+
+The logits for large-vocab models are never materialized in full: a
+`lax.scan` over chunks of the *sequence axis* computes, per (B, c) tile,
+
+* the true-label CE (the objective),
+* a sampled label ``ŷ ~ softmax(logits)`` and its CE — the *model-distribution*
+  loss whose backward pass yields the g statistics K-FAC needs (S5; never the
+  empirical Fisher),
+* the analytic head pre-activation gradient ``g = softmax − onehot(ŷ)`` whose
+  squared sum gives the head's **diagonal** G factor (vocab-sized dims use
+  diagonal factors, DESIGN §3).
+
+Chunking over T (not flat tokens) keeps every chunk aligned with the batch
+sharding — all data shards work on every chunk, no resharding.  Each chunk
+body is rematerialized, so backward never stores logits either.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tags import Tagger
+from repro.models.layers import softcap
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    c = max(1, min(n, target))
+    while n % c:
+        c -= 1
+    return c
+
+
+def lm_head_loss(tg: Tagger, h, w_head, labels, mask, rng, *,
+                 logit_cap: float = 0.0, name: str = "lm_head",
+                 chunk_target: int = 128):
+    """h: (B, T, d) final hidden; labels/mask: (B, T).
+
+    Returns ``(loss_true, loss_samp, metrics)`` — losses normalized by the
+    static token count B*T.  In collect mode, records the head's A-side
+    contraction and diagonal-G statistic on the tagger.
+    """
+    b, t, d = h.shape
+    v = w_head.shape[-1]
+    n = b * t
+    chunk = _pick_chunk(t, chunk_target)
+    nc = t // chunk
+    collect = tg.mode == "collect"
+
+    keys = jax.random.split(rng, nc)
+    xs = (h.reshape(b, nc, chunk, d).swapaxes(0, 1),
+          labels.reshape(b, nc, chunk).swapaxes(0, 1),
+          mask.astype(jnp.float32).reshape(b, nc, chunk).swapaxes(0, 1),
+          keys)
+
+    def body(carry, xs_c):
+        loss_t, loss_s, gsq, aa = carry
+        hc, yc, mc, key = xs_c                       # (B,c,d),(B,c),(B,c)
+        logits = jnp.einsum("bcd,dv->bcv", hc, w_head.astype(hc.dtype))
+        logits = softcap(logits.astype(jnp.float32), logit_cap)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ce_t = -jnp.take_along_axis(logp, yc[..., None], axis=-1)[..., 0] * mc
+        ys = jax.random.categorical(key, jax.lax.stop_gradient(logits),
+                                    axis=-1)
+        ce_s = -jnp.take_along_axis(logp, ys[..., None], axis=-1)[..., 0] * mc
+        loss_t = loss_t + jnp.sum(ce_t)
+        loss_s = loss_s + jnp.sum(ce_s)
+        if collect:
+            g = jax.lax.stop_gradient(
+                (jnp.exp(logp) - jax.nn.one_hot(ys, v, dtype=jnp.float32))
+                * mc[..., None])
+            gsq = gsq + jnp.sum(g * g, axis=(0, 1))
+            hsg = jax.lax.stop_gradient(hc)
+            aa = aa + jnp.einsum("bcd,bce->de", hsg, hsg,
+                                 preferred_element_type=jnp.float32)
+        return (loss_t, loss_s, gsq, aa), None
+
+    aa0 = jnp.zeros((d, d) if collect else (1, 1), jnp.float32)
+    init = (jnp.float32(0.0), jnp.float32(0.0),
+            jnp.zeros((v,) if collect else (1,), jnp.float32), aa0)
+    (loss_t, loss_s, gsq, aa), _ = jax.lax.scan(jax.checkpoint(body), init, xs)
+
+    if collect and name in tg.contract:
+        # tied-embedding archs have no separate head block and skip this
+        tg.records[name] = {"aa": aa, "gdiag": gsq / n}
+
+    norm = 1.0 / n
+    metrics = {"loss": loss_t * norm}
+    return loss_t * norm, loss_s * norm, metrics
+
+
+def head_logits(h, w_head, logit_cap: float = 0.0):
+    """Unchunked logits for serving (decode steps have tiny N)."""
+    logits = jnp.einsum("...d,dv->...v", h, w_head.astype(h.dtype))
+    return softcap(logits.astype(jnp.float32), logit_cap)

@@ -1,0 +1,127 @@
+"""Shared model layers: norm, RoPE, dense (K-FAC tagged), attention.
+
+Attention is computed in query chunks with a plain per-chunk softmax (each
+chunk sees the full key range), which bounds the score buffer to
+``(B, H, chunk, Tk)`` — the pure-jnp analogue of the Pallas flash kernel in
+``repro.kernels`` (which is used on real TPUs; this path is its oracle).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tags import Tagger
+
+DEFAULT_Q_CHUNK = 256
+
+
+def rms_norm(x, scale, eps: float):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def dense(tg: Tagger, name: str, w, x):
+    """K-FAC-tagged linear map: s = x @ w (no bias; LLM convention)."""
+    s = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    return tg.tag(name, x, s)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, T, H, hd); positions: (B, T) or (T,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (B, T, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + causal + sliding window + softcap), query-chunked
+# ---------------------------------------------------------------------------
+
+def _attn_chunk(q, k, v, q_pos, k_pos, *, causal, window, cap, kv_valid):
+    """q: (B, Cq, Hq, hd); k/v: (B, Tk, Hkv, hd); positions 1-d int arrays."""
+    b, cq, hq, hd = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, cq, hkv, group, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    scores = softcap(scores, cap)
+    mask = jnp.ones((cq, tk), dtype=bool)
+    dq = q_pos[:, None]
+    dk = k_pos[None, :]
+    if causal:
+        mask &= dq >= dk
+    if window:
+        mask &= dq - dk < window
+    if kv_valid is not None:  # (B, Tk) validity for decode caches
+        mask = mask[None] & kv_valid[:, None, :]
+        mask = mask[:, None, None]  # (B,1,1,Cq,Tk)
+    else:
+        mask = mask[None, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(b, cq, hq, hd)
+
+
+def attention(q, k, v, *, causal=True, window=0, cap=0.0, q_offset=None,
+              kv_valid=None, q_chunk: int = DEFAULT_Q_CHUNK):
+    """Multi-head attention with GQA.
+
+    q: (B, Tq, Hq, hd);  k, v: (B, Tk, Hkv, hd).
+    q_offset: scalar position of q[0] (decode); default 0 (prefill/train
+    aligned so q_pos = arange(Tq), k_pos = arange(Tk)).
+    kv_valid: (B, Tk) bool — valid cache entries during decode.
+    """
+    b, tq, hq, hd = q.shape
+    tk = k.shape[1]
+    k_pos = jnp.arange(tk)
+    if q_offset is None:
+        q_pos0 = jnp.arange(tq)
+    else:
+        q_pos0 = q_offset + jnp.arange(tq)
+
+    if tq <= q_chunk:
+        return _attn_chunk(q, k, v, q_pos0, k_pos, causal=causal,
+                           window=window, cap=cap, kv_valid=kv_valid)
+
+    while tq % q_chunk:           # largest divisor of tq <= requested chunk
+        q_chunk -= 1
+    n = tq // q_chunk
+    qs = q.reshape(b, n, q_chunk, hq, hd).swapaxes(0, 1)  # (n, B, Cq, Hq, hd)
+    ps = q_pos0.reshape(n, q_chunk)
+
+    def body(_, xs):
+        qc, pc = xs
+        out = _attn_chunk(qc, k, v, pc, k_pos, causal=causal, window=window,
+                          cap=cap, kv_valid=kv_valid)
+        return 0, out
+
+    # remat the chunk: never store the (B, H, Cq, Tk) probs for backward
+    _, outs = jax.lax.scan(jax.checkpoint(body), 0, (qs, ps))
+    return outs.swapaxes(0, 1).reshape(b, tq, hq, hd)

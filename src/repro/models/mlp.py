@@ -1,0 +1,123 @@
+"""MLP / deep-autoencoder models — the paper's own experimental family (S13).
+
+Faithful to the paper's setup: homogeneous coordinates (``ā = [a; 1]`` so the
+bias is the last row of each W), tanh units, Bernoulli (cross-entropy)
+reconstruction loss.  Every layer gets full two-sided Kronecker factors, and
+the chain structure supports the **block-tridiagonal** inverse approximation
+(S4.3) — consecutive-layer cross moments ``Ā_{i,i+1}``, ``G_{i,i+1}`` are
+recorded alongside the diagonal ones.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.autoencoder import AutoencoderConfig
+from repro.core.tags import LayerMeta, Tagger
+from repro.models import params as PM
+
+
+def autoencoder_dims(cfg: AutoencoderConfig) -> List[int]:
+    enc = list(cfg.encoder)
+    return enc + enc[-2::-1]          # mirror decoder
+
+
+class MLP:
+    """Feed-forward net with K-FAC tags.  dims = [d0, d1, ..., dL]."""
+
+    def __init__(self, dims: List[int], nonlin: str = "tanh",
+                 loss: str = "bernoulli", mesh=None):
+        self.dims = list(dims)
+        self.n_layers = len(dims) - 1
+        self.nonlin = {"tanh": jnp.tanh, "relu": jax.nn.relu}[nonlin]
+        self.loss_kind = loss
+        self.mesh = mesh
+        self.defs = {
+            f"W{i}": PM.ParamDef((dims[i] + 1, dims[i + 1]), P(),
+                                 init="normal")
+            for i in range(self.n_layers)
+        }
+        self.metas: Dict[str, LayerMeta] = {
+            f"layer{i}": LayerMeta(
+                name=f"layer{i}", param_path=(f"W{i}",),
+                d_in=dims[i], d_out=dims[i + 1], kind="dense",
+                has_bias=True)
+            for i in range(self.n_layers)
+        }
+        self.layer_order = [f"layer{i}" for i in range(self.n_layers)]
+        self.contract_map = {}            # MLP records raw ā (cross moments)
+
+    # -- params ---------------------------------------------------------
+    def init_params(self, key, scale: float = None, sparse: bool = True):
+        """Paper-style "sparse initialization" (Martens, 2010): each unit gets
+        a limited number of nonzero incoming weights."""
+        params = {}
+        keys = jax.random.split(key, self.n_layers)
+        for i in range(self.n_layers):
+            d_in, d_out = self.dims[i], self.dims[i + 1]
+            k1, k2 = jax.random.split(keys[i])
+            w = jax.random.normal(k1, (d_in, d_out)) * (scale or 1.0)
+            if sparse and d_in > 15:
+                # keep 15 random connections per output unit
+                idx = jax.vmap(
+                    lambda k: jax.random.permutation(k, d_in) < 15)(
+                        jax.random.split(k2, d_out)).T
+                w = jnp.where(idx, w, 0.0)
+            else:
+                w = w / np.sqrt(d_in)
+            b = jnp.zeros((1, d_out))
+            params[f"W{i}"] = jnp.concatenate([w, b], axis=0)
+        return params
+
+    # -- forward --------------------------------------------------------
+    def logits(self, params, x, tg: Optional[Tagger] = None):
+        tg = tg or Tagger("plain")
+        a = x
+        for i in range(self.n_layers):
+            ab = jnp.concatenate(
+                [a, jnp.ones((*a.shape[:-1], 1), a.dtype)], axis=-1)
+            s = ab @ params[f"W{i}"]
+            s = tg.tag(f"layer{i}", ab, s)
+            a = s if i == self.n_layers - 1 else self.nonlin(s)
+        return a
+
+    def _nll(self, z, y):
+        if self.loss_kind == "bernoulli":
+            # - sum_j [ y log sigmoid(z) + (1-y) log(1 - sigmoid(z)) ]
+            return jnp.sum(jnp.logaddexp(0.0, z) - y * z, axis=-1)
+        return 0.5 * jnp.sum((z - y) ** 2, axis=-1)    # gaussian
+
+    def sample_targets(self, z, rng):
+        if self.loss_kind == "bernoulli":
+            return jax.random.bernoulli(rng, jax.nn.sigmoid(z)).astype(z.dtype)
+        return z + jax.random.normal(rng, z.shape, z.dtype)
+
+    def loss(self, params, probes, batch, rng, mode: str = "plain"):
+        """Returns ((loss_true, loss_sampled), aux) — same contract as LM."""
+        tg = Tagger(mode, probes, self.contract_map)
+        z = self.logits(params, batch["x"], tg)
+        n = z.shape[0]
+        lt = jnp.mean(self._nll(z, batch["y"]))
+        ys = self.sample_targets(jax.lax.stop_gradient(z), rng)
+        ls = jnp.mean(self._nll(z, ys))
+        return (lt, ls), {"recs": tg.out(), "metrics": {"loss": lt}}
+
+    def probe_shapes(self, batch):
+        def f(p, b):
+            (lt, ls), aux = self.loss(p, None, b, jax.random.PRNGKey(0),
+                                      mode="shapes")
+            return aux["recs"]
+        return jax.eval_shape(f, PM.abstract(self.defs), batch)
+
+    def make_probes(self, shapes):
+        return {k: jnp.zeros(v.shape, jnp.float32) for k, v in shapes.items()}
+
+    def abstract_params(self, dtype=jnp.float32):
+        return PM.abstract(self.defs, dtype, self.mesh)
+
+    def n_params(self):
+        return PM.count(self.defs)

@@ -1,0 +1,79 @@
+"""Mixture-of-Experts FFN with GShard-style capacity dispatch.
+
+Tokens are grouped by batch row (G=B, S=T); dispatch/combine tensors
+``(B, S, E, C)`` shard over (data, model) and GSPMD lowers the dispatch
+einsums to all-to-alls when experts are model-sharded.
+
+K-FAC: the router is a standard dense tag; expert weights get **per-expert**
+factors over the tokens routed to them (`kind="expert"`), with the dispatch
+slot-validity mask as the per-position weight.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tags import Tagger
+from repro.models.layers import dense
+
+
+def capacity(seq: int, n_experts: int, top_k: int, factor: float = 1.25) -> int:
+    return max(1, int(math.ceil(seq * top_k / n_experts * factor)))
+
+
+def _dispatch(gates, top_k: int, cap: int):
+    """gates: (B, S, E) softmax router probs (non-diff ok).
+
+    Returns the 0/1 dispatch tensor D: (B, S, E, C).
+    """
+    b, s, e = gates.shape
+    _, topi = jax.lax.top_k(gates, top_k)                      # (B,S,k)
+    counts = jnp.zeros((b, e), jnp.int32)
+    d_parts = []
+    for j in range(top_k):
+        oh = jax.nn.one_hot(topi[..., j], e, dtype=jnp.int32)  # (B,S,E)
+        pos_in_e = jnp.cumsum(oh, axis=1) - oh + counts[:, None, :]
+        pos = jnp.sum(pos_in_e * oh, axis=-1)                  # (B,S)
+        valid = (pos < cap)
+        counts = counts + jnp.sum(oh, axis=1)
+        dj = (oh.astype(jnp.float32)[..., None]
+              * jax.nn.one_hot(pos, cap, dtype=jnp.float32)[..., None, :]
+              * valid[..., None, None].astype(jnp.float32))    # (B,S,E,C)
+        d_parts.append(dj)
+    return sum(d_parts)
+
+
+def moe_ffn(tg: Tagger, name: str, p: Dict, x, *, n_experts: int,
+            top_k: int, cap_factor: float = 1.25):
+    """x: (B, T, d).  p: router (d,E), gate/up (E,d,f), down (E,f,d)."""
+    b, t, d = x.shape
+    cap = capacity(t, n_experts, top_k, cap_factor)
+
+    router_logits = dense(tg, f"{name}.router", p["router"], x)   # (B,T,E)
+    gates = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    dsp = _dispatch(jax.lax.stop_gradient(gates), top_k, cap)
+    # switch-style load-balance aux loss (token fraction x differentiable P_e)
+    frac = jnp.mean(dsp.sum(-1), axis=1)                          # (B,E)
+    aux = n_experts * jnp.mean(jnp.sum(frac * jnp.mean(gates, axis=1), axis=-1))
+    # combine weights: dispatch mask x differentiable gate probs, renormalized
+    comb = dsp * gates[..., None]
+    comb = comb / jnp.maximum(comb.sum(axis=(-2, -1), keepdims=True), 1e-9)
+    dsp = dsp.astype(x.dtype)
+    comb = comb.astype(x.dtype)
+
+    xe = jnp.einsum("bsec,bsd->becd", dsp, x)                     # dispatch
+    slot_valid = jnp.einsum("bsec->bec", dsp)
+
+    def etag(nm, a, s):
+        return tg.tag(f"{name}.{nm}", a, s, weight=slot_valid)
+
+    wg, wu, wd = p["gate"], p["up"], p["down"]
+    hg = etag("gate", xe, jnp.einsum("becd,edf->becf", xe, wg.astype(x.dtype)))
+    hu = etag("up", xe, jnp.einsum("becd,edf->becf", xe, wu.astype(x.dtype)))
+    hh = jax.nn.silu(hg) * hu
+    ye = etag("down", hh, jnp.einsum("becf,efd->becd", hh, wd.astype(x.dtype)))
+    y = jnp.einsum("bsec,becd->bsd", comb, ye)                    # combine
+    return y, aux

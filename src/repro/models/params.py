@@ -1,0 +1,87 @@
+"""Parameter descriptor mini-framework.
+
+Models build a pytree of :class:`ParamDef` leaves (a pure function of the
+config).  The same tree then yields:
+
+* ``materialize``  -> real initialized arrays (smoke tests / real training),
+* ``abstract``     -> ShapeDtypeStructs (dry-run lowering, zero allocation),
+* ``shardings``    -> NamedShardings for pjit in_shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    spec: P = P()
+    init: str = "normal"      # normal | zeros | ones | embed
+    scale: Optional[float] = None   # None -> 1/sqrt(fan_in)
+    dtype: str = "float32"
+
+    @property
+    def fan_in(self) -> int:
+        # last-but-one dim is fan-in for matmul weights; 1-d params use size
+        if len(self.shape) >= 2:
+            return self.shape[-2]
+        return max(1, self.shape[0])
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _leaves(tree):
+    return jax.tree.leaves(tree, is_leaf=is_def)
+
+
+def materialize(key, tree, dtype=None):
+    defs = _leaves(tree)
+    keys = jax.random.split(key, max(1, len(defs)))
+
+    def make(d: ParamDef, k):
+        dt = dtype or d.dtype
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dt)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dt)
+        if d.init == "embed":
+            return (jax.random.normal(k, d.shape, jnp.float32) * 0.02).astype(dt)
+        scale = d.scale if d.scale is not None else 1.0 / np.sqrt(d.fan_in)
+        return (jax.random.normal(k, d.shape, jnp.float32) * scale).astype(dt)
+
+    it = iter(keys)
+    return jax.tree.map(lambda d: make(d, next(it)), tree, is_leaf=is_def)
+
+
+def abstract(tree, dtype=None, mesh: Optional[Mesh] = None):
+    def mk(d: ParamDef):
+        sh = None
+        if mesh is not None:
+            sh = NamedSharding(mesh, d.spec)
+        return jax.ShapeDtypeStruct(d.shape, dtype or d.dtype, sharding=sh)
+    return jax.tree.map(mk, tree, is_leaf=is_def)
+
+
+def shardings(tree, mesh: Mesh):
+    return jax.tree.map(lambda d: NamedSharding(mesh, d.spec), tree, is_leaf=is_def)
+
+
+def specs(tree):
+    return jax.tree.map(lambda d: d.spec, tree, is_leaf=is_def)
+
+
+def with_spec(d: ParamDef, spec: P) -> ParamDef:
+    return dataclasses.replace(d, spec=spec)
+
+
+def count(tree) -> int:
+    return sum(int(np.prod(d.shape)) for d in _leaves(tree))

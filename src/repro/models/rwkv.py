@@ -1,0 +1,132 @@
+"""RWKV6 ("Finch") block: time-mix with data-dependent decay + channel-mix.
+
+Training/prefill uses the chunked linear-attention formulation: within a
+chunk, pairwise decay differences are applied in log-space (all exponents
+<= 0, so numerically safe); across chunks, the (B, H, hd, hd) wkv state is
+propagated.  Decode is the exact recurrence.
+
+Recurrence per head (r, k, v: (hd,), w: (hd,) in (0,1), u: bonus):
+    out_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+
+K-FAC: all projections (r/k/v/g/out, decay LoRA, channel-mix) are dense tags;
+the per-channel decay base w0 / bonus u / mix vectors use the diagonal
+Fisher fallback.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tags import Tagger
+from repro.models.layers import dense, rms_norm
+
+RWKV_CHUNK = 32
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / `last` for t=0). x: (B,T,d)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    else:
+        last = last[:, None, :]
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _chunked_wkv(r, k, v, logw, u, s0, chunk: int):
+    """r,k,v: (B,T,H,hd); logw: (B,T,H,hd) (<=0); u: (H,hd); s0: (B,H,hd,hd).
+
+    Returns (out: (B,T,H,hd), sT).  out_t[j] = sum_i r_t[i] * M_t[i,j].
+    """
+    bsz, t, h, hd = r.shape
+    c = min(chunk, t)
+    while t % c:
+        c -= 1
+    nc = t // c
+
+    def resh(x):
+        return x.reshape(bsz, nc, c, h, hd).swapaxes(0, 1)
+
+    rs, ks, vs, lws = resh(r), resh(k), resh(v), resh(logw)
+
+    def body(s, xs):
+        rc, kc, vc, lwc = xs                    # (B,c,H,hd)
+        cw = jnp.cumsum(lwc, axis=1)            # cumulative log-decay incl. t
+        cw_prev = cw - lwc                      # decay up to t-1 (exclusive)
+        # inter-chunk: r_t through decayed initial state
+        r_dec = rc * jnp.exp(cw_prev)
+        out = jnp.einsum("bchi,bhij->bchj", r_dec, s)
+        # intra-chunk: pairwise decay exp(cw_prev[t] - cw[s]) for s < t
+        diff = cw_prev[:, :, None] - cw[:, None, :]   # (B,c,c,H,hd): t,s
+        tri = jnp.tril(jnp.ones((c, c), bool), -1)[None, :, :, None, None]
+        att = jnp.where(tri, jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bthi,btshi,bshi->bths", rc, att, kc)
+        out = out + jnp.einsum("bths,bshj->bthj", scores, vc)
+        # bonus (current token) term
+        bonus = jnp.einsum("bthi,hi,bthi->bth", rc, u, kc)
+        out = out + bonus[..., None] * vc
+        # state update: S' = diag(exp(cw_T)) S + sum_s exp(cw_T - cw[s]) k_s v_s^T
+        cw_t = cw[:, -1]                        # (B,H,hd)
+        k_dec = kc * jnp.exp(cw_t[:, None] - cw)
+        s = jnp.exp(cw_t)[..., None] * s + jnp.einsum(
+            "bshi,bshj->bhij", k_dec, vc)
+        return s, out
+
+    sT, outs = jax.lax.scan(body, s0, (rs, ks, vs, lws))
+    return outs.swapaxes(0, 1).reshape(bsz, t, h, hd), sT
+
+
+def rwkv_time_mix(tg: Tagger, name: str, p: Dict, x, state: Optional[Dict],
+                  *, head_dim: int, chunk: int = RWKV_CHUNK):
+    """x: (B,T,d). state: None or {"shift": (B,d), "wkv": (B,H,hd,hd)}."""
+    bsz, t, d = x.shape
+    h = d // head_dim
+    xp = _shift(x, None if state is None else state["shift_tm"])
+
+    def mix(mu):
+        return x + (xp - x) * mu.astype(x.dtype)
+
+    r = dense(tg, f"{name}.r", p["wr"], mix(p["mu_r"]))
+    kk = dense(tg, f"{name}.k", p["wk"], mix(p["mu_k"]))
+    v = dense(tg, f"{name}.v", p["wv"], mix(p["mu_v"]))
+    g = dense(tg, f"{name}.g", p["wg"], mix(p["mu_g"]))
+    # data-dependent decay (LoRA on the shifted-mix input)
+    xw = mix(p["mu_w"])
+    wlo = dense(tg, f"{name}.w_lora_a", p["w_lora_a"], xw)
+    wlo = dense(tg, f"{name}.w_lora_b", p["w_lora_b"], jnp.tanh(wlo))
+    logw = -jnp.exp(p["w0"].astype(jnp.float32) + wlo.astype(jnp.float32))
+    logw = jnp.clip(logw, -20.0, -1e-4)          # log of decay in (0,1)
+
+    def heads(z):
+        return z.reshape(bsz, t, h, head_dim)
+
+    s0 = (jnp.zeros((bsz, h, head_dim, head_dim), jnp.float32)
+          if state is None else state["wkv"])
+    out, sT = _chunked_wkv(heads(r).astype(jnp.float32),
+                           heads(kk).astype(jnp.float32),
+                           heads(v).astype(jnp.float32),
+                           heads(logw),
+                           p["u"].astype(jnp.float32).reshape(h, head_dim),
+                           s0, chunk)
+    out = rms_norm(out, p["ln_x"], 1e-5)         # per-head group norm
+    out = out.reshape(bsz, t, d).astype(x.dtype) * jax.nn.silu(g)
+    y = dense(tg, f"{name}.o", p["wo"], out)
+    new_state = {"shift_tm": x[:, -1, :], "wkv": sT}
+    return y, new_state
+
+
+def rwkv_channel_mix(tg: Tagger, name: str, p: Dict, x,
+                     state: Optional[Dict]):
+    xp = _shift(x, None if state is None else state["shift_cm"])
+
+    def mix(mu):
+        return x + (xp - x) * mu.astype(x.dtype)
+
+    r = dense(tg, f"{name}.cm_r", p["cm_wr"], mix(p["mu_cr"]))
+    k = dense(tg, f"{name}.cm_k", p["cm_wk"], mix(p["mu_ck"]))
+    kk = jnp.square(jax.nn.relu(k))
+    y = dense(tg, f"{name}.cm_v", p["cm_wv"], kk)
+    out = jax.nn.sigmoid(r) * y
+    return out, {"shift_cm": x[:, -1, :]}

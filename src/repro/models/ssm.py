@@ -1,0 +1,112 @@
+"""Mamba (selective SSM) block — jamba's non-attention layers.
+
+Training/prefill uses a chunked associative scan: sequence split into chunks,
+`lax.associative_scan` inside each chunk (log-depth, MXU-friendly), carry
+state passed between chunks — bounding the (B, chunk, d_inner, N) transient.
+
+Decode keeps {conv window, ssm state} and does one recurrence step.
+
+K-FAC: in/x/dt/out projections are dense tags; the per-channel A_log / D / dt
+bias vectors fall back to the diagonal Fisher (DESIGN §5).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tags import Tagger
+from repro.models.layers import dense
+
+SSM_CHUNK = 256
+
+
+def dt_rank(d_model: int) -> int:
+    return max(1, -(-d_model // 16))  # ceil(d/16)
+
+
+def _conv_shift(x, w, state=None):
+    """Causal depthwise conv over T via shifts. x: (B,T,di); w: (K,di).
+
+    state: (B, K-1, di) previous inputs for decode/chunk continuation.
+    Returns (y, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)  # (B, K-1+T, di)
+    y = sum(xx[:, j:j + x.shape[1], :] * w[j] for j in range(k))
+    new_state = xx[:, -(k - 1):, :] if k > 1 else state
+    return y, new_state
+
+
+def _scan_chunked(a, b, h0, chunk: int):
+    """h_t = a_t * h_{t-1} + b_t over axis 1.  a, b: (B, T, di, N)."""
+    bsz, t, di, n = a.shape
+    c = min(chunk, t)
+    while t % c:
+        c -= 1
+    nc = t // c
+    a_ = a.reshape(bsz, nc, c, di, n).swapaxes(0, 1)
+    b_ = b.reshape(bsz, nc, c, di, n).swapaxes(0, 1)
+
+    def combine(l, r):
+        return (r[0] * l[0], r[0] * l[1] + r[1])
+
+    def body(h, xs):
+        ac, bc = xs
+        cum_a, s = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        hc = s + cum_a * h[:, None]
+        return hc[:, -1], hc
+
+    hT, hs = jax.lax.scan(body, h0, (a_, b_))
+    return hs.swapaxes(0, 1).reshape(bsz, t, di, n), hT
+
+
+def mamba_block(tg: Tagger, name: str, p: Dict, x, state=None,
+                *, ssm_state_dim: int, conv_dim: int, chunk: int = SSM_CHUNK,
+                mesh=None) -> Tuple[jax.Array, Dict]:
+    """x: (B, T, d). state: None (train/prefill from scratch) or
+    {"conv": (B, K-1, di), "ssm": (B, di, N)} for decode continuation.
+    Returns (y, new_state).
+    """
+    bsz, t, d = x.shape
+    n = ssm_state_dim
+    di = p["out_proj"].shape[0]
+    r = p["dt_proj"].shape[0]
+
+    xz = dense(tg, f"{name}.in_proj", p["in_proj"], x)          # (B,T,2*di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xi, new_conv = _conv_shift(xi, p["conv_w"].astype(xi.dtype), conv_state)
+    xi = jax.nn.silu(xi)
+
+    dbc = dense(tg, f"{name}.x_proj", p["x_proj"], xi)          # (B,T,R+2N)
+    dt_raw, bc, cc = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = dense(tg, f"{name}.dt_proj", p["dt_proj"], dt_raw)     # (B,T,di)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    a_mat = -jnp.exp(p["A_log"].astype(jnp.float32))            # (di,N)
+    xif = xi.astype(jnp.float32)
+    decay = jnp.exp(dt[..., None] * a_mat)                      # (B,T,di,N)
+    drive = (dt * xif)[..., None] * bc.astype(jnp.float32)[:, :, None, :]
+
+    h0 = (jnp.zeros((bsz, di, n), jnp.float32) if state is None
+          else state["ssm"].astype(jnp.float32))
+    if (mesh is not None and "model" in mesh.axis_names
+            and di % mesh.shape["model"] == 0):
+        # keep the (B, T, di, N) scan inputs d_inner-sharded over `model`
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.utils.sharding import axis_size, batch_axes
+        ba = batch_axes(mesh)
+        b_ax = ba if bsz % axis_size(mesh, ba) == 0 else None
+        spec = NamedSharding(mesh, P(b_ax, None, "model", None))
+        decay = jax.lax.with_sharding_constraint(decay, spec)
+        drive = jax.lax.with_sharding_constraint(drive, spec)
+    hs, hT = _scan_chunked(decay, drive, h0, chunk)
+    y = jnp.einsum("btdn,btn->btd", hs, cc.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32) * xif
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = dense(tg, f"{name}.out_proj", p["out_proj"], y)
+    return out, {"conv": new_conv, "ssm": hT.astype(jnp.float32)}

@@ -1,0 +1,35 @@
+"""Elastic scaling + straggler mitigation.
+
+Elastic re-mesh: every piece of K-FAC state (params, factors, inverses,
+momentum) has a mesh-independent logical layout; moving a job to a different
+pod count is `reshard(state, new_mesh_shardings)` after a checkpoint restore
+(the data pipeline is (seed, step)-deterministic, so the token stream is
+unaffected).
+
+Straggler mitigation in a synchronous SPMD world:
+  * the d³ inverse work is amortized (T3) and hot-started (Newton-Schulz) —
+    the heavy step is rare and bounded;
+  * `KFACConfig.stats_period` / tau1 drop stats work under time pressure;
+  * checkpoint-restart excludes persistently slow hosts (the launcher can
+    rebuild the mesh without them — see reshard below).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+
+def reshard(tree, shardings):
+    """device_put every leaf onto new shardings (same tree structure)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s) if s is not None else x,
+        tree, shardings)
+
+
+def remesh_plan(old_mesh: Mesh, new_mesh: Mesh, specs_tree):
+    """Build the sharding tree for `reshard` on the new mesh from the
+    PartitionSpec tree used on the old one."""
+    return jax.tree.map(lambda spec: NamedSharding(new_mesh, spec),
+                        specs_tree)

@@ -1,0 +1,149 @@
+"""Fault-tolerant K-FAC training loop.
+
+Schedule (paper Algorithm 2): stats+grads every step; inverses every T3
+steps and for k<=3; gamma candidate sweep every T2; lambda rule every T1.
+
+Fault tolerance:
+  * atomic async checkpoints every `checkpoint_every` (params + full
+    optimizer state + step), auto-restore on construction;
+  * SIGTERM/SIGINT preemption hook → synchronous checkpoint, clean exit;
+  * non-finite guard: a NaN/Inf update is *skipped* (params untouched,
+    damping raised) rather than poisoning the run;
+  * elastic restart: checkpoints restore onto any mesh (see elastic.py).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import KFACConfig, TrainConfig
+from repro.core.kfac import KFAC
+from repro.training.checkpoint import Checkpointer
+from repro.utils import tree as T
+
+
+class Trainer:
+    def __init__(self, model, opt: KFAC, train_cfg: TrainConfig, mesh=None,
+                 checkpointer: Optional[Checkpointer] = None):
+        self.model = model
+        self.opt = opt
+        self.tc = train_cfg
+        self.mesh = mesh
+        self.ckpt = checkpointer
+        self._preempted = False
+        self._install_handlers()
+
+        self._stats = jax.jit(opt.stats_grads)
+        self._grads_only = jax.jit(opt.grads_only)
+        self._refresh = jax.jit(lambda s: opt.refresh_inverses(s, hot=True))
+        self._stagger = opt.stagger_groups()
+        self._refresh_sub = {
+            i: jax.jit(lambda s, ns=tuple(g): opt.refresh_subset(s, ns))
+            for i, g in enumerate(self._stagger)} if opt.cfg.staggered_inverse \
+            else None
+        self._update = jax.jit(
+            lambda s, p, g, b, r: opt.apply_update(s, p, g, b, r))
+        self._multi = jax.jit(opt.refresh_multi)
+        self._update3 = jax.jit(
+            lambda s, p, g, b, r, gs, i3: opt.apply_update(
+                s, p, g, b, r,
+                cand_inv=[jax.tree.map(lambda x: x[c], i3) for c in range(3)],
+                gammas=gs))
+        self._lambda = jax.jit(opt.lambda_step)
+
+    # ------------------------------------------------------------------
+    def _install_handlers(self):
+        def handler(signum, frame):
+            self._preempted = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # not on main thread (tests)
+
+    # ------------------------------------------------------------------
+    def fit(self, params, data, steps: int, start_step: int = 0,
+            log=print) -> Dict[str, Any]:
+        cfg = self.opt.cfg
+        batch0 = data.batch(start_step)
+        state = self.opt.init(params, batch0)
+
+        # auto-restore
+        if self.ckpt is not None:
+            got_step, got = self.ckpt.restore({"params": params,
+                                               "state": state})
+            if got_step is not None:
+                params, state = got["params"], got["state"]
+                start_step = got_step
+                log(f"[trainer] restored checkpoint at step {got_step}")
+
+        history = []
+        t_start = time.time()
+        for step in range(start_step, steps):
+            batch = data.batch(step)
+            rng = jax.random.fold_in(jax.random.PRNGKey(self.tc.seed), step)
+
+            if step % cfg.stats_period == 0:
+                state, grads, metrics = self._stats(state, params, batch, rng)
+            else:
+                # stats skipped (straggler/budget mode): grads only
+                state, grads, metrics = self._grads_only(state, params, batch,
+                                                         rng)
+
+            use_gamma_sweep = (cfg.t2 > 0 and step > 0 and step % cfg.t2 == 0)
+            if use_gamma_sweep:
+                gs, i3 = self._multi(state)
+                new_params, state, um = self._update3(
+                    state, params, grads, batch, rng, gs, i3)
+            else:
+                if step - start_step < 3:
+                    state = self._refresh(state)
+                elif self._refresh_sub is not None:
+                    # staggered: 1/T3 of the layer inverses per step
+                    state = self._refresh_sub[step % cfg.t3](state)
+                elif step % cfg.t3 == 0:
+                    state = self._refresh(state)
+                new_params, state, um = self._update(
+                    state, params, grads, batch, rng)
+
+            # non-finite guard: skip poisoned updates, raise damping
+            finite = bool(T.tree_isfinite(new_params)) and np.isfinite(
+                float(um["delta_norm"]))
+            if finite:
+                params = new_params
+            else:
+                state = dict(state, lam=state["lam"] * 4.0,
+                             delta0=T.tree_zeros_like(state["delta0"]))
+                log(f"[trainer] step {step}: non-finite update SKIPPED "
+                    f"(lam -> {float(state['lam']):.3g})")
+
+            if cfg.t1 > 0 and (step + 1) % cfg.t1 == 0:
+                state, rho = self._lambda(state, params, batch, rng)
+
+            metrics = {**metrics, **um}
+            history.append({k: float(v) for k, v in metrics.items()
+                            if jnp.ndim(v) == 0})
+            if step % self.tc.log_every == 0:
+                log(f"[trainer] step {step}: loss={history[-1]['loss']:.4f} "
+                    f"alpha={history[-1]['alpha']:.2e} "
+                    f"lam={float(state['lam']):.3g}")
+
+            if self.ckpt is not None and (
+                    (step + 1) % self.tc.checkpoint_every == 0):
+                self.ckpt.save(step + 1, {"params": params, "state": state})
+
+            if self._preempted:
+                log(f"[trainer] preempted at step {step}; checkpointing")
+                if self.ckpt is not None:
+                    self.ckpt.save(step + 1, {"params": params,
+                                              "state": state}, block=True)
+                break
+
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return {"params": params, "state": state, "history": history,
+                "seconds": time.time() - t_start}

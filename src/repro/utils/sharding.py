@@ -1,0 +1,64 @@
+"""Mesh-axis helpers.
+
+Physical mesh axes: ``("data", "model")`` single-pod or
+``("pod", "data", "model")`` multi-pod.  Batch is sharded over
+``(pod, data)``; tensor-parallel dims over ``model``; FSDP parameter
+storage over ``data`` (all-gather happens inside the pod over ICI, while the
+``pod`` axis only carries gradient/statistic reductions over DCN).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Optional[Mesh]):
+    """The mesh axes the global batch is sharded over."""
+    if mesh is not None and "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return ("data",)
+
+
+def spec_for_batch(mesh, *trailing):
+    return P(batch_axes(mesh), *trailing)
+
+
+def named(mesh: Optional[Mesh], spec: P):
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec)
+
+
+def constrain(x, mesh: Optional[Mesh], spec: P):
+    """with_sharding_constraint that no-ops without a mesh (CPU tests)."""
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def divides(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def pick_shard(dim: int, mesh: Optional[Mesh], axis: str) -> Optional[str]:
+    """Return `axis` if `dim` is divisible by that mesh axis size, else None.
+
+    Keeps specs valid for reduced smoke-test configs on 1 device and for dims
+    (e.g. 8 kv heads on a 16-way model axis) that don't divide evenly.
+    """
+    if mesh is None or axis not in mesh.axis_names:
+        return None
+    return axis if divides(dim, mesh.shape[axis]) else None
+
+
+def axis_size(mesh: Optional[Mesh], axis) -> int:
+    if mesh is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= axis_size(mesh, a)
+        return n
+    return mesh.shape.get(axis, 1) if axis in mesh.axis_names else 1

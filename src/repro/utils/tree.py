@@ -1,0 +1,76 @@
+"""Pytree arithmetic helpers (no optax offline — we roll our own)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_dot(a, b):
+    """Sum of elementwise products across the whole pytree (float32 accum)."""
+    leaves = jax.tree.map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return jax.tree.reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_sqnorm(a):
+    return tree_dot(a, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, a)
+
+
+def tree_count_params(a) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def get_path(tree, path):
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def set_path(tree, path, value):
+    """Functionally replace tree[path] (dicts/tuples/lists only)."""
+    if not path:
+        return value
+    k, rest = path[0], path[1:]
+    if isinstance(tree, dict):
+        out = dict(tree)
+        out[k] = set_path(tree[k], rest, value)
+        return out
+    if isinstance(tree, (tuple, list)):
+        out = list(tree)
+        out[k] = set_path(tree[k], rest, value)
+        return type(tree)(out)
+    raise TypeError(f"cannot set path {path} in {type(tree)}")
+
+
+def tree_isfinite(a):
+    leaves = jax.tree.map(lambda x: jnp.all(jnp.isfinite(x)), a)
+    return jax.tree.reduce(jnp.logical_and, leaves, jnp.bool_(True))

@@ -1,0 +1,56 @@
+"""The trip-count-aware HLO cost analyzer vs known-cost programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_cost
+
+
+def _compile_text(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_scan_flops_multiplied():
+    def body(c, x):
+        return c @ x, ()
+
+    w = jnp.zeros((64, 64))
+    xs = jnp.zeros((7, 64, 64))
+    txt = _compile_text(lambda w, xs: jax.lax.scan(body, w, xs)[0], w, xs)
+    res = hlo_cost.analyze(txt)
+    want = 7 * 2 * 64 ** 3
+    assert abs(res["flops"] - want) < 0.1 * want, res["flops"]
+
+
+def test_nested_scan():
+    def inner(c, x):
+        return c @ x, ()
+
+    xs = jnp.zeros((5, 32, 32))
+
+    def outer(c, _):
+        c2, _ = jax.lax.scan(inner, c, xs)
+        return c2, ()
+
+    w = jnp.zeros((32, 32))
+    txt = _compile_text(
+        lambda w: jax.lax.scan(outer, w, jnp.zeros((3, 1)))[0], w)
+    res = hlo_cost.analyze(txt)
+    want = 15 * 2 * 32 ** 3
+    assert abs(res["flops"] - want) < 0.15 * want, res["flops"]
+
+
+def test_dot_flops_exact():
+    a = jnp.zeros((128, 256))
+    b = jnp.zeros((256, 64))
+    txt = _compile_text(lambda a, b: a @ b, a, b)
+    res = hlo_cost.analyze(txt)
+    want = 2 * 128 * 256 * 64
+    assert abs(res["flops"] - want) <= 0.05 * want
+
+
+def test_shape_bytes():
+    assert hlo_cost.shape_bytes("f32[2,3]{1,0}") == 24
+    assert hlo_cost.shape_bytes("bf16[10]") == 20
+    assert hlo_cost.shape_bytes("(f32[2], s32[3])") == 8 + 12
+    assert hlo_cost.shape_bytes("pred[]") == 1

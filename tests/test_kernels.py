@@ -1,0 +1,111 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.factor_update import factor_update
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.matmul import matmul
+from repro.kernels.ns_step import ns_inverse, ns_step
+from repro.kernels.precond import precondition
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
+                                   (128, 512, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_shapes_dtypes(m, k, n, dtype):
+    a, b = _rand(0, (m, k), dtype), _rand(1, (k, n), dtype)
+    c = _rand(2, (m, n), jnp.float32)
+    out = matmul(a, b, c, alpha=0.7, beta=0.3, bm=128, bn=128, bk=128)
+    want = ref.matmul_ref(a, b, c, alpha=0.7, beta=0.3)
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(out, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,d", [(256, 128), (512, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_factor_update(n, d, dtype):
+    x = _rand(3, (n, d), dtype)
+    c = _rand(4, (d, d), jnp.float32)
+    out = factor_update(x, c, alpha=0.05, beta=0.95)
+    want = ref.factor_update_ref(x, c, alpha=0.05, beta=0.95)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(out, want, rtol=tol, atol=tol)
+
+
+def test_ns_step_matches_ref():
+    d = 128
+    m = _rand(5, (d, d), jnp.float32)
+    m = m @ m.T / d + jnp.eye(d)
+    x0 = jnp.eye(d) / jnp.max(jnp.sum(jnp.abs(m), -1))
+    np.testing.assert_allclose(ns_step(m, x0), ref.ns_step_ref(m, x0),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ns_inverse_converges():
+    d = 128
+    m = _rand(6, (d, d), jnp.float32)
+    m = m @ m.T / d + jnp.eye(d)          # well-conditioned SPD
+    inv = ns_inverse(m, iters=30)
+    np.testing.assert_allclose(inv @ m, jnp.eye(d), rtol=0, atol=1e-3)
+
+
+def test_precondition():
+    d_in, d_out = 256, 128
+    a = _rand(7, (d_in, d_in), jnp.float32)
+    g = _rand(8, (d_out, d_out), jnp.float32)
+    v = _rand(9, (d_in, d_out), jnp.float32)
+    np.testing.assert_allclose(precondition(a, v, g),
+                               ref.precondition_ref(a, v, g),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("causal,window,cap", [(True, 0, 0.0),
+                                               (True, 64, 0.0),
+                                               (True, 0, 30.0),
+                                               (False, 0, 0.0)])
+def test_flash_attention(hq, hkv, causal, window, cap):
+    b, tq, tk, hd = 2, 128, 128, 64
+    q = _rand(10, (b, hq, tq, hd), jnp.float32)
+    k = _rand(11, (b, hkv, tk, hd), jnp.float32)
+    v = _rand(12, (b, hkv, tk, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window, cap=cap,
+                          bq=64, bk=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   cap=cap)
+    np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    b, hq, hkv, t, hd = 1, 2, 1, 128, 64
+    q = _rand(13, (b, hq, t, hd), jnp.bfloat16)
+    k = _rand(14, (b, hkv, t, hd), jnp.bfloat16)
+    v = _rand(15, (b, hkv, t, hd), jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               want.astype(jnp.float32), rtol=0.05, atol=0.05)
+
+
+@pytest.mark.parametrize("length", [1, 100, 512])
+def test_flash_decode(length):
+    from repro.kernels.flash_decode import flash_decode
+    b, hq, hkv, s, hd = 2, 4, 2, 512, 64
+    q = _rand(20, (b, hq, hd), jnp.float32)
+    k = _rand(21, (b, hkv, s, hd), jnp.float32)
+    v = _rand(22, (b, hkv, s, hd), jnp.float32)
+    out = flash_decode(q, k, v, length, bk=128)
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, hd)
+    sc = jnp.einsum("bhgd,bhsd->bhgs", qg, k) / np.sqrt(hd)
+    sc = jnp.where(jnp.arange(s) < length, sc, -1e30)
+    p = jax.nn.softmax(sc, -1)
+    want = jnp.einsum("bhgs,bhsd->bhgd", p, v).reshape(b, hq, hd)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)

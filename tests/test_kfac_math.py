@@ -1,0 +1,274 @@
+"""K-FAC math correctness: the paper's core identities on small matrices."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import factors as F
+from repro.core import inverse as INV
+from repro.core import tridiag as TRI
+from repro.core.tags import LayerMeta
+from repro.models.mlp import MLP
+
+
+def _spd(key, d, scale=1.0):
+    m = jax.random.normal(jax.random.PRNGKey(key), (d, d))
+    return m @ m.T / d * scale + 0.1 * jnp.eye(d)
+
+
+# ---------------------------------------------------------------------------
+# S4.2: block-diagonal inverse = Kronecker of factor inverses
+# ---------------------------------------------------------------------------
+
+def test_block_inverse_matches_dense_kron():
+    da, dg = 5, 4
+    a, g = _spd(0, da), _spd(1, dg)
+    meta = LayerMeta("l", ("w",), d_in=da, d_out=dg)
+    gamma = 0.3
+    inv = INV.damped_pair_inverse(meta, a, g, gamma, method="eigh")
+    v = jax.random.normal(jax.random.PRNGKey(2), (da, dg))
+    got = INV.apply_block_inverse(meta, inv, v)
+
+    # dense reference: F = A ⊗ G with factored damping.  Row-major flatten of
+    # V (da, dg) matches kron(A, G) (i.e. column-stacked vec of the paper's
+    # (dg, da) layout).
+    pi = INV.pi_trace(a, "full", da, g, "full", dg)
+    a_d = a + pi * gamma * jnp.eye(da)
+    g_d = g + gamma / pi * jnp.eye(dg)
+    f = jnp.kron(a_d, g_d)
+    want = (jnp.linalg.inv(f) @ v.reshape(-1)).reshape(da, dg)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_blocked_factor_matches_blockdiag_dense():
+    """TP-blocked factors = block-diagonal approximation of the full factor."""
+    d, nb = 8, 2
+    x = jax.random.normal(jax.random.PRNGKey(3), (32, d))
+    full = F.outer_sum(x, "full", 1)
+    blocked = F.outer_sum(x, "block", nb)
+    for b in range(nb):
+        sl = slice(b * d // nb, (b + 1) * d // nb)
+        np.testing.assert_allclose(blocked[b], full[sl, sl], rtol=1e-5)
+
+
+def test_ns_inverse_matches_eigh():
+    a = _spd(4, 16) + jnp.eye(16)
+    inv_e = INV.factor_inverse(a, "full", 0.5, method="eigh")
+    inv_n = INV.factor_inverse(a, "full", 0.5, method="ns", iters=25)
+    np.testing.assert_allclose(inv_e, inv_n, rtol=1e-3, atol=1e-4)
+
+
+def test_ns_hot_start():
+    a = _spd(5, 12) + jnp.eye(12)
+    cold = INV.factor_inverse(a, "full", 0.2, method="eigh")
+    a2 = a + 0.01 * _spd(6, 12)           # slowly-drifting factor
+    hot = INV.factor_inverse(a2, "full", 0.2, method="ns", iters=6, prev=cold)
+    want = INV.factor_inverse(a2, "full", 0.2, method="eigh")
+    np.testing.assert_allclose(hot, want, rtol=1e-3, atol=1e-4)
+
+
+def test_pi_trace_formula():
+    """pi = sqrt((trA/dA)/(trG/dG)) — S6.3."""
+    a, g = _spd(7, 6), _spd(8, 3)
+    pi = INV.pi_trace(a, "full", 6, g, "full", 3)
+    want = jnp.sqrt((jnp.trace(a) / 6) / (jnp.trace(g) / 3))
+    np.testing.assert_allclose(pi, want, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Appendix B: (A⊗B − C⊗D)⁻¹ application
+# ---------------------------------------------------------------------------
+
+def test_appb_kron_difference_inverse():
+    da, dg = 4, 3
+    a, b = _spd(9, da, 2.0), _spd(10, dg, 2.0)
+    # make C, D small enough that A⊗B − C⊗D stays PD
+    c, d = 0.1 * _spd(11, da), 0.1 * _spd(12, dg)
+    a_is = TRI._inv_sqrt(a)
+    b_is = TRI._inv_sqrt(b)
+    s1, e1 = jnp.linalg.eigh(a_is @ c @ a_is)
+    s2, e2 = jnp.linalg.eigh(b_is @ d @ b_is)
+    cache = {"k1": a_is @ e1, "k2": b_is @ e2, "s1": s1, "s2": s2}
+    x = jax.random.normal(jax.random.PRNGKey(13), (dg, da))
+    got = TRI._sigma_inv_apply(cache, x)
+    dense = jnp.kron(a, b) - jnp.kron(c, d)
+    want = (jnp.linalg.inv(dense) @ x.T.reshape(-1)).reshape(da, dg).T
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# S4.3: tridiagonal F̂⁻¹ = Ξᵀ Λ Ξ vs a dense construction
+# ---------------------------------------------------------------------------
+
+def _dense_tridiag_inverse(a_d, g_d, cross_a, cross_g):
+    """Build F̂⁻¹ densely from the same damped factors via Ψ / Σ."""
+    ell = len(a_d)
+    blocks = [a.shape[0] * g.shape[0] for a, g in zip(a_d, g_d)]
+    psi = []
+    for i in range(ell - 1):
+        pa = cross_a[i] @ jnp.linalg.inv(a_d[i + 1])
+        pg = cross_g[i] @ jnp.linalg.inv(g_d[i + 1])
+        psi.append(jnp.kron(pa, pg))
+    sig = []
+    for i in range(ell - 1):
+        f_ii = jnp.kron(a_d[i], g_d[i])
+        f_jj = jnp.kron(a_d[i + 1], g_d[i + 1])
+        sig.append(f_ii - psi[i] @ f_jj @ psi[i].T)
+    sig.append(jnp.kron(a_d[-1], g_d[-1]))
+    n = sum(blocks)
+    xi = jnp.eye(n)
+    off = np.cumsum([0] + blocks)
+    xi = np.array(xi)
+    for i in range(ell - 1):
+        xi[off[i]:off[i + 1], off[i + 1]:off[i + 2]] = -np.array(psi[i])
+    lam = np.zeros((n, n))
+    for i in range(ell):
+        lam[off[i]:off[i + 1], off[i]:off[i + 1]] = np.array(
+            jnp.linalg.inv(sig[i]))
+    return jnp.array(xi.T @ lam @ xi)
+
+
+def test_tridiag_apply_matches_dense():
+    dims = [3, 4, 2, 3]
+    mlp = MLP(dims, nonlin="tanh", loss="bernoulli")
+    key = jax.random.PRNGKey(0)
+    params = mlp.init_params(key, sparse=False)
+    x = jax.random.bernoulli(jax.random.PRNGKey(1), 0.5, (64, dims[0])).astype(
+        jnp.float32)
+    batch = {"x": x, "y": x[:, :dims[-1]] if dims[-1] != dims[0] else x}
+    batch["y"] = x[:, :dims[-1]]
+
+    # gather stats
+    shapes = mlp.probe_shapes(jax.eval_shape(lambda b: b, batch))
+    probes = mlp.make_probes(shapes)
+
+    def f2(pr):
+        (_, ls), aux = mlp.loss(params, pr, batch, jax.random.PRNGKey(2),
+                                mode="collect")
+        return ls, aux
+
+    ls, vjp_fn, aux = jax.vjp(f2, probes, has_aux=True)
+    (gp,) = vjp_fn(jnp.float32(1.0))
+    recs = aux["recs"]
+    n = x.shape[0]
+    factors = {}
+    for name, m in mlp.metas.items():
+        factors[name] = {
+            "a": F.outer_sum(recs[name]["a"], "full", 1) / n,
+            "g": F.g_from_cotangent(gp[name], m, n)}
+    factors["__cross__"] = TRI.cross_contrib(mlp, recs, gp, n)
+
+    gamma = 0.7
+    tri = TRI.precompute(mlp, factors, gamma, 0.0)
+    vs = {name: jax.random.normal(jax.random.PRNGKey(3 + i),
+                                  (mlp.metas[name].a_dim,
+                                   mlp.metas[name].g_dim))
+          for i, name in enumerate(mlp.layer_order)}
+    got = TRI.apply(mlp, tri, vs)
+
+    # dense reference with identically-damped factors
+    a_d, g_d, cross_a, cross_g = [], [], [], []
+    for name in mlp.layer_order:
+        m = mlp.metas[name]
+        a = factors[name]["a"]
+        g = factors[name]["g"]
+        pi = INV.pi_trace(a, "full", m.a_dim, g, "full", m.g_dim)
+        a_d.append(a + pi * gamma * jnp.eye(m.a_dim))
+        g_d.append(g + gamma / pi * jnp.eye(m.g_dim))
+    for i in range(len(mlp.layer_order) - 1):
+        cross_a.append(factors["__cross__"][f"a{i}"])
+        cross_g.append(factors["__cross__"][f"g{i}"])
+    f_inv = _dense_tridiag_inverse(a_d, g_d, cross_a, cross_g)
+    vec = jnp.concatenate([vs[nm].reshape(-1) for nm in mlp.layer_order])
+    want_flat = f_inv @ vec
+    off = 0
+    for name in mlp.layer_order:
+        m = mlp.metas[name]
+        sz = m.a_dim * m.g_dim
+        want = want_flat[off:off + sz].reshape(m.a_dim, m.g_dim)
+        np.testing.assert_allclose(got[name], want, rtol=2e-3, atol=2e-3)
+        off += sz
+
+
+# ---------------------------------------------------------------------------
+# Lemma 4: E[g] = 0 under model-sampled targets (statistical check)
+# ---------------------------------------------------------------------------
+
+def test_lemma4_sampled_g_zero_mean():
+    dims = [6, 5, 4]
+    mlp = MLP(dims, loss="bernoulli")
+    params = mlp.init_params(jax.random.PRNGKey(0), sparse=False)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2000, dims[0]))
+    batch = {"x": x, "y": jnp.zeros((2000, dims[-1]))}
+    shapes = mlp.probe_shapes(jax.eval_shape(lambda b: b, batch))
+    probes = mlp.make_probes(shapes)
+
+    def f2(pr):
+        (_, ls), aux = mlp.loss(params, pr, batch, jax.random.PRNGKey(7),
+                                mode="collect")
+        return ls
+
+    gp = jax.grad(f2)(probes)
+    for name, g in gp.items():
+        mean = jnp.mean(jnp.abs(jnp.mean(g * 2000, axis=0)))
+        scale = jnp.std(g * 2000) + 1e-9
+        assert mean < 5 * scale / np.sqrt(2000), (name, mean, scale)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1: invariance to affine reparameterization (Omega transforms)
+# ---------------------------------------------------------------------------
+
+def test_invariance_to_input_transform():
+    """K-FAC's update direction is invariant to an invertible affine
+    transform of the inputs (Omega_0), up to the matching reparameterization
+    — gradient descent is not."""
+    dims = [4, 6, 3]
+    key = jax.random.PRNGKey(0)
+    omega = jax.random.normal(jax.random.PRNGKey(42), (4, 4)) * 0.5 + jnp.eye(4)
+
+    def run(transform):
+        mlp = MLP(dims, loss="gaussian")
+        params = mlp.init_params(key, sparse=False)
+        if transform:   # reparameterize W0 so the function is unchanged:
+            # x' = x Omegaᵀ  =>  W0' = [Omega^{-T} W0w ; b0]
+            w0 = params["W0"]
+            w0w = jnp.linalg.solve(omega.T, w0[:-1])
+            params = dict(params, W0=jnp.concatenate([w0w, w0[-1:]], 0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (512, 4))
+        y = jax.random.normal(jax.random.PRNGKey(2), (512, 3))
+        xin = x @ omega.T if transform else x
+        batch = {"x": xin, "y": y}
+
+        shapes = mlp.probe_shapes(jax.eval_shape(lambda b: b, batch))
+        probes = mlp.make_probes(shapes)
+
+        def floss(p, pr):
+            (lt, ls), aux = mlp.loss(p, pr, batch, jax.random.PRNGKey(3),
+                                     mode="collect")
+            return (lt, ls), aux
+
+        (lt, ls), vjp_fn, aux = jax.vjp(floss, params, probes, has_aux=True)
+        grads, _ = vjp_fn((jnp.float32(1.0), jnp.float32(0.0)))
+        _, gp = vjp_fn((jnp.float32(0.0), jnp.float32(1.0)))
+        n = 512
+        out = {}
+        for name, m in mlp.metas.items():
+            a = F.outer_sum(aux["recs"][name]["a"], "full", 1) / n
+            g = F.g_from_cotangent(gp[name], m, n)
+            # tiny isotropic damping (Thm 1 assumes damping negligible)
+            inv = {"a_inv": jnp.linalg.inv(a + 1e-6 * jnp.eye(m.a_dim)),
+                   "g_inv": jnp.linalg.inv(g + 1e-6 * jnp.eye(m.g_dim))}
+            out[name] = INV.apply_block_inverse(m, inv, grads[f"W{name[5:]}"])
+        return out, params
+
+    u_base, p_base = run(False)
+    u_tr, p_tr = run(True)
+    # Theorem 1: zeta(theta† + delta†) = theta + delta. For W0 (weights part)
+    # that means Omega^{-T}-transformed update rows must match.
+    got = jnp.concatenate(
+        [jnp.linalg.solve(omega.T, u_base["layer0"][:-1]),
+         u_base["layer0"][-1:]], axis=0)
+    np.testing.assert_allclose(u_tr["layer0"], got, rtol=5e-2, atol=5e-4)
+    # layers above the transform are untouched
+    np.testing.assert_allclose(u_tr["layer1"], u_base["layer1"], rtol=5e-2,
+                               atol=5e-4)

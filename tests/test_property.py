@@ -1,0 +1,104 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import factors as F
+from repro.core import inverse as INV
+from repro.core.damping import lambda_update
+from repro.models.head import _pick_chunk
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+dims = st.integers(min_value=2, max_value=12)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _spd(seed, d, scale=1.0):
+    m = jax.random.normal(jax.random.PRNGKey(seed), (d, d))
+    return m @ m.T / d * scale + 0.05 * jnp.eye(d)
+
+
+@given(seeds, dims)
+def test_outer_sum_psd(seed, d):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (16, d))
+    a = F.outer_sum(x, "full", 1)
+    w = np.linalg.eigvalsh(np.asarray(a))
+    assert w.min() > -1e-4 * max(1.0, w.max())
+    np.testing.assert_allclose(a, a.T, rtol=1e-5, atol=1e-6)
+
+
+@given(seeds, dims, st.floats(min_value=0.1, max_value=100.0))
+def test_pi_scale_equivariance(seed, d, c):
+    """pi(cA, G) = sqrt(c) pi(A, G) — trace-norm homogeneity (S6.3)."""
+    a, g = _spd(seed, d), _spd(seed + 1, d)
+    p1 = INV.pi_trace(a, "full", d, g, "full", d)
+    p2 = INV.pi_trace(c * a, "full", d, g, "full", d)
+    np.testing.assert_allclose(p2, np.sqrt(c) * p1, rtol=1e-4)
+
+
+@given(seeds, dims, st.floats(min_value=0.01, max_value=10.0))
+def test_inverse_is_inverse(seed, d, gamma):
+    a = _spd(seed, d)
+    inv = INV.factor_inverse(a, "full", gamma, method="eigh")
+    np.testing.assert_allclose(
+        inv @ (a + gamma * jnp.eye(d)), jnp.eye(d), atol=5e-3)
+
+
+@given(seeds, dims, dims)
+def test_precondition_linear(seed, da, dg):
+    """F⁻¹(aV1 + bV2) = a F⁻¹V1 + b F⁻¹V2."""
+    from repro.core.tags import LayerMeta
+    meta = LayerMeta("l", ("w",), d_in=da, d_out=dg)
+    inv = {"a_inv": jnp.linalg.inv(_spd(seed, da)),
+           "g_inv": jnp.linalg.inv(_spd(seed + 1, dg))}
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed + 2))
+    v1 = jax.random.normal(k1, (da, dg))
+    v2 = jax.random.normal(k2, (da, dg))
+    lhs = INV.apply_block_inverse(meta, inv, 2.0 * v1 - 3.0 * v2)
+    rhs = (2.0 * INV.apply_block_inverse(meta, inv, v1)
+           - 3.0 * INV.apply_block_inverse(meta, inv, v2))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-4)
+
+
+@given(seeds)
+def test_decay_eps_bounds(seed):
+    k = jnp.int32(seed % 10_000 + 1)
+    eps = F.decay_eps(k, 0.95)
+    assert 0.0 <= float(eps) <= 0.95
+
+
+@given(st.floats(min_value=-5, max_value=5),
+       st.floats(min_value=1e-6, max_value=1e6))
+def test_lambda_update_bounded(rho, lam):
+    out = float(lambda_update(jnp.float32(lam), jnp.float32(rho), 0.9))
+    assert 1e-8 <= out <= 1e8
+
+
+@given(st.integers(min_value=1, max_value=4096),
+       st.integers(min_value=1, max_value=512))
+def test_pick_chunk_divides(n, target):
+    c = _pick_chunk(n, target)
+    assert n % c == 0 and 1 <= c <= max(1, min(n, target))
+
+
+@given(seeds, st.integers(min_value=2, max_value=6),
+       st.integers(min_value=2, max_value=4))
+def test_blend_converges_to_new(seed, d, steps):
+    """Repeated blending with eps=0 returns exactly the new value."""
+    old = {"a": jnp.ones((d, d))}
+    new = {"a": jnp.full((d, d), 3.0)}
+    out = F.blend(old, new, 0.0)
+    np.testing.assert_allclose(out["a"], new["a"])
+    out2 = F.blend(old, new, 1.0)
+    np.testing.assert_allclose(out2["a"], old["a"])
+
+
+@given(seeds, dims)
+def test_ns_vs_eigh_property(seed, d):
+    a = _spd(seed, d) + jnp.eye(d)
+    e = INV.factor_inverse(a, "full", 0.3, method="eigh")
+    n = INV.factor_inverse(a, "full", 0.3, method="ns", iters=30)
+    np.testing.assert_allclose(e, n, rtol=5e-3, atol=5e-4)
