@@ -1,6 +1,14 @@
-"""Kernel microbenches (paper S8 cost model): wall-clock of the pure-jnp
-paths (what this CPU container executes) + analytic flops.  On TPU the
-Pallas kernels replace these; interpret-mode timings are correctness-only."""
+"""Kernel microbenches (paper S8 cost model) through the *optimizer's own*
+entry points: a DenseKronecker curvature block's fused factor accumulation
+and two-sided preconditioning, under both `kernel_backend` settings, plus
+the Newton–Schulz inverse and attention reference rows.
+
+On this CPU container the Pallas rows run in interpret mode, so their
+wall-clock is correctness-only; on TPU the same code paths compile.  What
+matters is that these are the identical `factor_update`/`precondition`
+routes `KFAC.stats_grads`/`KFAC.apply_update` execute with
+`kernel_backend="pallas"` — the numbers describe the real optimizer step.
+"""
 from __future__ import annotations
 
 import time
@@ -8,6 +16,9 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import KFACConfig
+from repro.core.blocks import build_blocks
+from repro.core.tags import LayerMeta
 from repro.kernels import ref
 
 
@@ -21,35 +32,53 @@ def _time(f, *args, iters=5):
     return (time.time() - t0) / iters * 1e6
 
 
-def run():
+def _dense_block(d_in, d_out, backend):
+    meta = LayerMeta("bench", ("w",), d_in=d_in, d_out=d_out, kind="dense")
+    cfg = KFACConfig(kernel_backend=backend)
+    return build_blocks({"bench": meta}, cfg)["bench"]
+
+
+def run(backends=("xla", "pallas"), iters=5):
     rows = []
     d, n = 512, 4096
-    x = jax.random.normal(jax.random.PRNGKey(0), (n, d), jnp.float32)
-    c = jnp.zeros((d, d))
-    f = jax.jit(lambda x, c: ref.factor_update_ref(x, c, alpha=0.05,
-                                                   beta=0.95))
-    us = _time(f, x, c)
-    rows.append(("factor_update_512", us, 2 * n * d * d / (us * 1e-6) / 1e9))
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, d), jnp.float32)
+    cot = jax.random.normal(jax.random.fold_in(key, 1), (n, d)) / n
+    old = {"a": jnp.eye(d), "g": jnp.eye(d)}
+    rec = {"a": x}
+    v = jax.random.normal(jax.random.fold_in(key, 2), (d, d))
+    a_inv = jnp.eye(d)
+    g_inv = jnp.eye(d)
+
+    for backend in backends:
+        blk = _dense_block(d, d, backend)
+        # the S5 stats route KFAC.stats_grads runs: fused C <- eps C + a XtX
+        f = jax.jit(lambda eps, b=blk: b.update_factors(
+            old, rec, cot, {}, n, eps))
+        us = _time(f, jnp.float32(0.95), iters=iters)
+        rows.append((f"factor_update_{d}_{backend}", us,
+                     2 * 2 * n * d * d / (us * 1e-6) / 1e9))
+
+        # the S4.2 apply route KFAC.apply_update runs: U = A^-1 V G^-1
+        g = jax.jit(lambda vv, b=blk: b.precondition(
+            {"a_inv": a_inv, "g_inv": g_inv}, vv))
+        us = _time(g, v, iters=iters)
+        rows.append((f"precondition_{d}_{backend}", us,
+                     2 * 2 * d ** 3 / (us * 1e-6) / 1e9))
 
     m = jax.random.normal(jax.random.PRNGKey(1), (d, d))
     m = m @ m.T / d + jnp.eye(d)
-    g = jax.jit(lambda m: ref.ns_inverse_ref(m, 12))
-    us = _time(g, m)
-    rows.append(("ns_inverse_512x12", us, 12 * 2 * 2 * d ** 3 / (us * 1e-6) / 1e9))
-
-    a_inv = jnp.eye(d)
-    g_inv = jnp.eye(d)
-    v = jax.random.normal(jax.random.PRNGKey(2), (d, d))
-    h = jax.jit(ref.precondition_ref)
-    us = _time(h, a_inv, v, g_inv)
-    rows.append(("precondition_512", us, 2 * 2 * d ** 3 / (us * 1e-6) / 1e9))
+    h = jax.jit(lambda m: ref.ns_inverse_ref(m, 12))
+    us = _time(h, m, iters=iters)
+    rows.append(("ns_inverse_512x12", us,
+                 12 * 2 * 2 * d ** 3 / (us * 1e-6) / 1e9))
 
     b, hq, hkv, t, hd = 1, 8, 2, 1024, 64
     q = jax.random.normal(jax.random.PRNGKey(3), (b, hq, t, hd), jnp.float32)
     k = jax.random.normal(jax.random.PRNGKey(4), (b, hkv, t, hd), jnp.float32)
     vv = jax.random.normal(jax.random.PRNGKey(5), (b, hkv, t, hd), jnp.float32)
     fa = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
-    us = _time(fa, q, k, vv)
+    us = _time(fa, q, k, vv, iters=iters)
     rows.append(("attention_ref_1k", us,
                  4 * b * hq * t * t * hd / (us * 1e-6) / 1e9))
     return rows

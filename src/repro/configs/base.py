@@ -142,6 +142,10 @@ class KFACConfig:
 
     max_factor_dim: int = 8_192       # local dims above this -> diagonal factor
     factor_dtype: str = "float32"
+    kernel_backend: str = "xla"       # xla | pallas: route dense blocks'
+                                      # factor_update / precondition through
+                                      # the Pallas kernels (ragged shapes
+                                      # fall back to the einsum path)
     stats_period: int = 1             # update stats every N steps
     staggered_inverse: bool = False   # round-robin layer refresh (beyond-paper)
     damping_floor: float = 1e-8

@@ -1,3 +1,4 @@
 # K-FAC — the paper's primary contribution, as a composable JAX module.
-# See kfac.py (optimizer), factors.py (S3/S5), inverse.py (S4.2/S6.3),
-# tridiag.py (S4.3/App B), fisher.py (S6.4/App C), damping.py (S6.5/S6.6).
+# See kfac.py (optimizer), blocks/ (per-layer curvature-block registry),
+# factors.py (S3/S5), inverse.py (S4.2/S6.3), tridiag.py (S4.3/App B),
+# fisher.py (S6.4/App C), damping.py (S6.5/S6.6).

@@ -1,0 +1,14 @@
+# Curvature-block registry: per-layer Fisher blocks behind one interface.
+# Importing the package registers every built-in block class. See README.md.
+from repro.core.blocks.base import (CurvatureBlock, build_blocks, register,
+                                    registered, resolve)
+from repro.core.blocks.chain import TridiagChain
+from repro.core.blocks.kron import (BlockDiagKronecker, DenseKronecker,
+                                    DiagFactor, KroneckerPair)
+from repro.core.blocks.special import Embed, Expert, Head
+
+__all__ = [
+    "CurvatureBlock", "KroneckerPair", "DenseKronecker", "BlockDiagKronecker",
+    "DiagFactor", "Embed", "Head", "Expert", "TridiagChain",
+    "register", "registered", "resolve", "build_blocks",
+]

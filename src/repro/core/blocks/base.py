@@ -1,0 +1,180 @@
+"""Curvature-block abstraction (paper S3–S4): one object per Fisher block.
+
+The block-diagonal Fisher approximation assigns every tagged layer its own
+Kronecker-factored block ``F_i ≈ Ā_i ⊗ G_i``.  :class:`CurvatureBlock` owns
+everything per-layer the optimizer used to branch on ``meta.kind`` for:
+
+  * factor layout + zero/identity initialization and sharding specs,
+  * the per-step statistics contribution and decayed blend (S5),
+  * the damped factor inverses (S4.2 / S6.3),
+  * the preconditioner apply ``U = Ā⁻¹ V G⁻¹``.
+
+Concrete subclasses live in :mod:`repro.core.blocks.kron` (dense /
+TP-blocked / diagonal Kronecker pairs), :mod:`repro.core.blocks.special`
+(embedding, LM head, MoE expert) and :mod:`repro.core.blocks.chain`
+(the block-tridiagonal chain, S4.3).  Classes self-register against the
+``LayerMeta.kind`` values they serve; :func:`build_blocks` resolves one
+block instance per tagged layer.  Adding a new block family (EKFAC
+eigenbasis blocks, convolution blocks, ...) is one new registered class —
+no edits to the optimizer.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Dict, List, Optional, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import factors as F
+from repro.core import inverse as INV
+from repro.core.tags import LayerMeta
+
+
+class CurvatureBlock(abc.ABC):
+    """One layer's Fisher block: layout, statistics, inverse, apply."""
+
+    kinds: tuple = ()   # LayerMeta.kind values this class can serve
+    priority: int = 0   # higher wins when several classes claim a kind
+
+    def __init__(self, meta: LayerMeta, cfg):
+        self.meta = meta
+        self.cfg = cfg
+
+    @classmethod
+    def handles(cls, meta: LayerMeta) -> bool:
+        """Refine registry dispatch beyond `kind` (e.g. on factor layout)."""
+        return True
+
+    # ------------------------------------------------------------------
+    # kernel routing
+    # ------------------------------------------------------------------
+    @property
+    def backend(self) -> str:
+        return getattr(self.cfg, "kernel_backend", "xla")
+
+    @staticmethod
+    def _interpret() -> bool:
+        return jax.default_backend() != "tpu"
+
+    # ------------------------------------------------------------------
+    # layout
+    # ------------------------------------------------------------------
+    @property
+    def lead(self) -> tuple:
+        m = self.meta
+        lead = ()
+        if m.n_stack:
+            lead += (m.n_stack,)
+        if m.n_expert:
+            lead += (m.n_expert,)
+        return lead
+
+    def init_factors(self) -> Dict[str, Any]:
+        m = self.meta
+        return {
+            "a": jnp.zeros(F.factor_shape(m.a_dim, m.a_kind, m.a_blocks,
+                                          self.lead), jnp.float32),
+            "g": jnp.zeros(F.factor_shape(m.g_dim, m.g_kind, m.g_blocks,
+                                          self.lead), jnp.float32),
+        }
+
+    def identity_inverse(self) -> Dict[str, Any]:
+        z = self.init_factors()
+
+        def one(arr, kind):
+            if kind == "diag":
+                return jnp.ones_like(arr)
+            return arr + jnp.eye(arr.shape[-1], dtype=jnp.float32)
+
+        return {"a_inv": one(z["a"], self.meta.a_kind),
+                "g_inv": one(z["g"], self.meta.g_kind)}
+
+    def factor_specs(self, mesh) -> Dict[str, Any]:
+        """Storage shardings for this block's factor/inverse state.
+
+        Stacked/expert/block lead dims go over `model` where aligned; the
+        matrix dim that CONTRACTS against the grad during preconditioning is
+        FSDP-sharded over `data` (A: columns, G: rows) so ``U = Ā⁻¹ V G⁻¹``
+        needs no gathers — just a small partial-sum all-reduce.
+        """
+        from jax.sharding import PartitionSpec as P
+        from repro.utils.sharding import pick_shard
+        m = self.meta
+
+        def one(dim, kind, blocks, side):
+            lead = []
+            if m.n_stack:
+                lead.append(None)
+            if m.n_expert:
+                lead.append(pick_shard(m.n_expert, mesh, "model"))
+            if kind == "diag":
+                return P(*lead, pick_shard(dim, mesh, "data"))
+            if kind == "block":
+                return P(*lead, pick_shard(blocks, mesh, "model"),
+                         pick_shard(dim // blocks, mesh, "data"), None)
+            if side == "a":
+                return P(*lead, None, pick_shard(dim, mesh, "data"))
+            return P(*lead, pick_shard(dim, mesh, "data"), None)
+
+        return {"a": one(m.a_dim, m.a_kind, m.a_blocks, "a"),
+                "g": one(m.g_dim, m.g_kind, m.g_blocks, "g")}
+
+    # ------------------------------------------------------------------
+    # statistics (S5)
+    # ------------------------------------------------------------------
+    @abc.abstractmethod
+    def stats_contrib(self, rec, gprobe, batch, n: int) -> Dict[str, Any]:
+        """This step's (1/N-normalized) factor contribution {"a", "g"}."""
+
+    def update_factors(self, old, rec, gprobe, batch, n: int, eps):
+        """Decayed blend ``C ← ε C + (1−ε) contrib``; ε may be traced."""
+        return F.blend(old, self.stats_contrib(rec, gprobe, batch, n), eps)
+
+    # ------------------------------------------------------------------
+    # inverses (S4.2 / S6.3)
+    # ------------------------------------------------------------------
+    def damped_inverse(self, fac, gamma, *, method: str = "eigh",
+                       iters: int = 12, prev: Optional[Dict] = None):
+        return INV.damped_pair_inverse(self.meta, fac["a"], fac["g"], gamma,
+                                       method=method, iters=iters, prev=prev)
+
+    # ------------------------------------------------------------------
+    # preconditioning
+    # ------------------------------------------------------------------
+    def precondition(self, inv, v):
+        """``U = Ā⁻¹ V G⁻¹`` with this block's structure; v shaped like W."""
+        return INV.apply_block_inverse(self.meta, inv, v)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, List[Type[CurvatureBlock]]] = {}
+
+
+def register(cls: Type[CurvatureBlock]) -> Type[CurvatureBlock]:
+    """Class decorator: file ``cls`` under every kind it serves."""
+    for kind in cls.kinds:
+        lst = _REGISTRY.setdefault(kind, [])
+        lst.append(cls)
+        lst.sort(key=lambda c: -c.priority)
+    return cls
+
+
+def registered(kind: str) -> List[Type[CurvatureBlock]]:
+    return list(_REGISTRY.get(kind, ()))
+
+
+def resolve(meta: LayerMeta) -> Type[CurvatureBlock]:
+    for cls in _REGISTRY.get(meta.kind, ()):
+        if cls.handles(meta):
+            return cls
+    raise KeyError(f"no curvature block registered for kind={meta.kind!r} "
+                   f"(layer {meta.name!r}); known kinds: {sorted(_REGISTRY)}")
+
+
+def build_blocks(metas: Dict[str, LayerMeta], cfg) -> Dict[str, CurvatureBlock]:
+    """One resolved block instance per tagged layer."""
+    return {name: resolve(m)(m, cfg) for name, m in metas.items()}

@@ -1,0 +1,117 @@
+"""Kronecker-pair curvature blocks for dense linear maps (paper S3–S4.2).
+
+Three concrete layouts, resolved from ``LayerMeta``'s per-side factor kinds:
+
+  * :class:`DenseKronecker`    — both factors dense (``full``/``full``).
+    The hot path: when ``kernel_backend == "pallas"`` and shapes tile, the
+    decayed factor accumulation runs through the fused
+    :func:`repro.kernels.factor_update.factor_update` kernel and the
+    two-sided apply through :func:`repro.kernels.precond.precondition`.
+  * :class:`BlockDiagKronecker` — at least one TP-blocked side (DESIGN §3).
+  * :class:`DiagFactor`         — at least one diagonal side (dims above
+    ``max_factor_dim``).
+
+All three share the per-side numerics in ``core.factors`` / ``core.inverse``;
+the subclasses differ in dispatch and in which paths may route to Pallas.
+Ragged shapes (or sides without raw activations) silently fall back to the
+einsum path, so the choice of backend never changes results — only kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import factors as F
+from repro.core.blocks.base import CurvatureBlock, register
+from repro.kernels.compat import tile_ok
+from repro.kernels.factor_update import factor_update
+from repro.kernels.precond import precondition as precond_kernel
+
+
+class KroneckerPair(CurvatureBlock):
+    """Shared statistics/inverse/apply logic for two-sided Kronecker blocks."""
+
+    def stats_contrib(self, rec, gprobe, batch, n):
+        m = self.meta
+        if "aa" in rec:              # contracted in-forward (scan models)
+            a_c = rec["aa"] / n
+        else:
+            a_c = F.outer_sum(rec["a"], m.a_kind, m.a_blocks,
+                              expert=m.kind == "expert") / n
+        g_c = F.g_from_cotangent(gprobe, m, n)
+        return {"a": a_c, "g": g_c}
+
+
+@register
+class DiagFactor(KroneckerPair):
+    """A diagonal factor on at least one side (vocab-scale dims)."""
+
+    kinds = ("dense",)
+    priority = 30
+
+    @classmethod
+    def handles(cls, meta):
+        return "diag" in (meta.a_kind, meta.g_kind)
+
+
+@register
+class BlockDiagKronecker(KroneckerPair):
+    """A TP-block-diagonal factor on at least one side."""
+
+    kinds = ("dense",)
+    priority = 20
+
+    @classmethod
+    def handles(cls, meta):
+        return "block" in (meta.a_kind, meta.g_kind)
+
+
+@register
+class DenseKronecker(KroneckerPair):
+    """Dense ``full``/``full`` Kronecker pair — the Pallas hot path."""
+
+    kinds = ("dense",)
+    priority = 10
+
+    # -- fused stats accumulation (S5 through the factor_update kernel) --
+    def _pallas_side(self, x, old, alpha, eps):
+        """One side's fused ``C ← ε C + α XᵀX`` if X tiles, else None."""
+        if x is None:
+            return None
+        x2 = x.reshape(-1, x.shape[-1])
+        if not tile_ok(*x2.shape):
+            return None
+        return factor_update(x2, old, alpha=alpha, beta=eps,
+                             interpret=self._interpret())
+
+    def update_factors(self, old, rec, gprobe, batch, n, eps):
+        if self.backend != "pallas" or self.lead:
+            return super().update_factors(old, rec, gprobe, batch, n, eps)
+        one = jnp.float32(1.0)
+        # A side: fuse only when the raw activations were recorded (models
+        # that contract Ā in-forward never materialize X outside the scan)
+        a_new = self._pallas_side(rec.get("a"), old["a"], (one - eps) / n, eps)
+        if a_new is None:
+            a_c = (rec["aa"] / n if "aa" in rec else
+                   F.outer_sum(rec["a"], "full", 1) / n)
+            a_new = eps * old["a"] + (one - eps) * a_c
+        # G side: cotangents of the (1/N)-normalized sampled loss; per-token
+        # g = N·cot, so G = (1/N) Σ g gᵀ = N Σ cot cotᵀ
+        cot = jax.lax.stop_gradient(gprobe)
+        g_new = self._pallas_side(cot, old["g"], (one - eps) * n, eps)
+        if g_new is None:
+            g_new = (eps * old["g"]
+                     + (one - eps) * F.g_from_cotangent(gprobe, self.meta, n))
+        return {"a": a_new, "g": g_new}
+
+    # -- two-sided apply through the precond kernel ---------------------
+    def precondition(self, inv, v):
+        m = self.meta
+        if (self.backend == "pallas" and tile_ok(m.a_dim, m.g_dim)
+                and v.shape[-2:] == (m.a_dim, m.g_dim)):
+            fn = lambda a_i, vv, g_i: precond_kernel(
+                a_i, vv, g_i, interpret=self._interpret())
+            for _ in range(v.ndim - 2):      # vmap over stack/expert dims
+                fn = jax.vmap(fn)
+            return fn(inv["a_inv"], v.astype(jnp.float32), inv["g_inv"])
+        return super().precondition(inv, v)

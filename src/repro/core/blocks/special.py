@@ -1,0 +1,56 @@
+"""Curvature blocks for the non-dense layer families.
+
+  * :class:`Embed`  — embedding lookups: Ā is the diagonal of token
+    frequencies (a one-hot input's second moment), G is dense on d_model.
+  * :class:`Head`   — the LM head: the model records a contracted ``aa``
+    over hidden states and a diagonal ``gdiag`` over the vocab side (the
+    full vocab² G would be unstorable).
+  * :class:`Expert` — MoE experts: per-expert factors over the tokens routed
+    to each expert, with the routing probability baked into the factor via
+    global-N normalization (rarely-hit experts get small factors and the
+    damping floor dominates — the consistent Fisher treatment).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import factors as F
+from repro.core.blocks.base import CurvatureBlock, register
+from repro.core.blocks.kron import KroneckerPair
+
+
+@register
+class Embed(CurvatureBlock):
+    """Embedding block: diagonal Ā of token counts, dense G."""
+
+    kinds = ("embed",)
+
+    def stats_contrib(self, rec, gprobe, batch, n):
+        m = self.meta
+        tokens = batch["tokens"]
+        mask = batch.get("mask", jnp.ones(tokens.shape, jnp.float32))
+        a_c = F.embed_diag_counts(tokens, mask, m.d_in) / n
+        g_c = F.g_from_cotangent(gprobe, m, n)
+        return {"a": a_c, "g": g_c}
+
+
+@register
+class Head(CurvatureBlock):
+    """LM-head block: contracted dense Ā, diagonal vocab-side G.
+
+    Both statistics are produced inside the model's chunked head loss
+    (see models/head.py), pre-normalized on the G side.
+    """
+
+    kinds = ("head",)
+
+    def stats_contrib(self, rec, gprobe, batch, n):
+        return {"a": rec["aa"] / n, "g": rec["gdiag"]}
+
+
+@register
+class Expert(KroneckerPair):
+    """Per-expert Kronecker factors; inherits the generic pair numerics
+    (outer_sum carries the expert axis; lead dims block the Pallas route)."""
+
+    kinds = ("expert",)

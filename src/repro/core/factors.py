@@ -16,6 +16,10 @@ Factor storage layouts by (kind):
   full : (*lead, d, d)          lead = (n_stack?, n_expert?)
   block: (*lead, nb, db, db)    TP/block-diagonal approximation (DESIGN §3)
   diag : (*lead, d)             vocab-sized dims (embed A, head G)
+
+This module holds the shared *numeric* helpers (contractions, layout math,
+decayed blend); state initialization and per-layer dispatch live in the
+``CurvatureBlock`` classes under ``core/blocks``.
 """
 from __future__ import annotations
 
@@ -98,23 +102,6 @@ def embed_diag_counts(ids, mask, vocab: int):
 # running state
 # ---------------------------------------------------------------------------
 
-def init_factor_state(metas: Dict[str, LayerMeta]) -> Dict[str, Any]:
-    out = {}
-    for name, m in metas.items():
-        lead = ()
-        if m.n_stack:
-            lead += (m.n_stack,)
-        if m.n_expert:
-            lead += (m.n_expert,)
-        out[name] = {
-            "a": jnp.zeros(factor_shape(m.a_dim, m.a_kind, m.a_blocks, lead),
-                           jnp.float32),
-            "g": jnp.zeros(factor_shape(m.g_dim, m.g_kind, m.g_blocks, lead),
-                           jnp.float32),
-        }
-    return out
-
-
 def decay_eps(k, cap: float):
     """Paper S5: ε = min(1 − 1/k, cap); k is the 1-based stats update count."""
     kf = jnp.maximum(k.astype(jnp.float32), 1.0)
@@ -123,42 +110,6 @@ def decay_eps(k, cap: float):
 
 def blend(old, new, eps):
     return jax.tree.map(lambda o, n: eps * o + (1.0 - eps) * n, old, new)
-
-
-def factor_specs(metas: Dict[str, LayerMeta], mesh) -> Dict[str, Any]:
-    """Storage shardings for the factor/inverse state.
-
-    Stacked/expert/block lead dims go over `model` where aligned; the first
-    matrix dim is FSDP-sharded over `data` when divisible, so the ~d² factor
-    state is spread over the whole pod rather than replicated.
-    """
-    from jax.sharding import PartitionSpec as P
-    from repro.utils.sharding import pick_shard
-
-    def one(meta: LayerMeta, dim, kind, blocks, side):
-        lead = []
-        if meta.n_stack:
-            lead.append(None)
-        if meta.n_expert:
-            lead.append(pick_shard(meta.n_expert, mesh, "model"))
-        if kind == "diag":
-            return P(*lead, pick_shard(dim, mesh, "data"))
-        if kind == "block":
-            return P(*lead, pick_shard(blocks, mesh, "model"),
-                     pick_shard(dim // blocks, mesh, "data"), None)
-        # full factors: shard the dim that CONTRACTS against the grad matrix
-        # during preconditioning (A: columns, einsum ...ij,...jk; G: rows,
-        # einsum ...jk with V's d_out) so U = A⁻¹ V G⁻¹ needs no gathers —
-        # just a small partial-sum all-reduce.
-        if side == "a":
-            return P(*lead, None, pick_shard(dim, mesh, "data"))
-        return P(*lead, pick_shard(dim, mesh, "data"), None)
-
-    out = {}
-    for name, m in metas.items():
-        out[name] = {"a": one(m, m.a_dim, m.a_kind, m.a_blocks, "a"),
-                     "g": one(m, m.g_dim, m.g_kind, m.g_blocks, "g")}
-    return out
 
 
 def g_from_cotangent(cot, meta: LayerMeta, n_norm: int):

@@ -12,6 +12,18 @@ The trainer composes four entry points per the paper's schedule:
                         momentum (S6.4/S7), candidate selection by M(δ).
   ``lambda_step``       every T1 steps: reduction ratio rho + LM rule (S6.5).
 
+Module map: every per-layer behavior (factor layout, statistics, damped
+inverses, preconditioner apply) lives in a ``CurvatureBlock`` from
+``core/blocks`` — this file only iterates blocks polymorphically, so the
+stats/inverse/precondition paths contain no per-kind branching.  The shared
+numerics the blocks call sit in ``core/factors.py`` (S3/S5 contractions),
+``core/inverse.py`` (S4.2/S6.3 damped inverses), ``core/tridiag.py``
+(S4.3/App B chain math), with ``core/fisher.py`` (S6.4/App C exact-F
+products) and ``core/damping.py`` (S6.5/S6.6) on the update side.  With
+``KFACConfig.kernel_backend == "pallas"``, dense blocks route their factor
+accumulation and two-sided apply through the Pallas kernels in
+``repro.kernels``.
+
 Keeping these separate (no lax.cond megakernel) keeps the per-step HLO —
 and hence the roofline accounting — honest.
 """
@@ -27,8 +39,7 @@ from repro.configs.base import KFACConfig
 from repro.core import damping as D
 from repro.core import factors as F
 from repro.core import fisher as FI
-from repro.core import inverse as INV
-from repro.core import tridiag as TRI
+from repro.core.blocks import TridiagChain, build_blocks
 from repro.utils import tree as T
 
 
@@ -50,6 +61,9 @@ class KFAC:
 
     def __init__(self, model, cfg: KFACConfig, mesh=None,
                  family: str = "categorical"):
+        if cfg.kernel_backend not in ("xla", "pallas"):
+            raise ValueError(f"unknown kernel_backend {cfg.kernel_backend!r}"
+                             " (expected 'xla' or 'pallas')")
         self.model = model
         self.cfg = cfg
         self.mesh = mesh
@@ -59,6 +73,8 @@ class KFAC:
         self.tagged = {m.param_path for m in self.metas.values()}
         self.tridiag = (cfg.inv_mode == "tridiag"
                         and hasattr(model, "layer_order"))
+        self.blocks = build_blocks(self.metas, cfg)
+        self.chain = TridiagChain(model, cfg) if self.tridiag else None
         self._probe_shapes = None
 
     # ------------------------------------------------------------------
@@ -83,9 +99,10 @@ class KFAC:
     # init
     # ------------------------------------------------------------------
     def init(self, params, batch) -> Dict[str, Any]:
-        factors = F.init_factor_state(self.metas)
-        if self.tridiag:
-            factors["__cross__"] = TRI.init_cross_state(self.model)
+        factors = {name: blk.init_factors()
+                   for name, blk in self.blocks.items()}
+        if self.chain is not None:
+            factors[TridiagChain.CROSS] = self.chain.init_factors()
         diag = jax.tree_util.tree_map_with_path(
             lambda kp, x: (jnp.zeros((0,), jnp.float32) if self._is_tagged(kp)
                            else jnp.zeros_like(x, jnp.float32)), params)
@@ -106,40 +123,32 @@ class KFAC:
         return state
 
     def _identity_inverses(self):
-        out = {}
-        for name, m in self.metas.items():
-            z = F.init_factor_state({name: m})[name]
-            out[name] = {
-                "a_inv": (jnp.ones_like(z["a"]) if m.a_kind == "diag" else
-                          jnp.zeros_like(z["a"])
-                          + jnp.eye(z["a"].shape[-1], dtype=jnp.float32)),
-                "g_inv": (jnp.ones_like(z["g"]) if m.g_kind == "diag" else
-                          jnp.zeros_like(z["g"])
-                          + jnp.eye(z["g"].shape[-1], dtype=jnp.float32)),
-            }
-        if self.tridiag:
-            out["__tri__"] = None  # populated at first refresh
+        out = {name: blk.identity_inverse()
+               for name, blk in self.blocks.items()}
+        if self.chain is not None:
+            out[TridiagChain.TRI] = self.chain.identity_inverse()
         return out
 
     def state_shardings(self, state_abs, param_shardings, mesh):
         """NamedSharding tree for the optimizer state (dry-run / pjit).
 
         Factor/inverse storage is FSDP-spread over `data` and stack/expert/
-        block dims over `model` (see factors.factor_specs); diag & momentum
+        block dims over `model` (see CurvatureBlock.factor_specs); diag & momentum
         follow the parameter shardings; scalars replicate."""
         from jax.sharding import NamedSharding, PartitionSpec as P
         rep = NamedSharding(mesh, P())
-        fs = F.factor_specs(self.metas, mesh)
+        fs = {name: blk.factor_specs(mesh) for name, blk in self.blocks.items()}
         fac_sh = {name: {"a": NamedSharding(mesh, fs[name]["a"]),
                          "g": NamedSharding(mesh, fs[name]["g"])}
                   for name in self.metas}
         inv_sh = {name: {"a_inv": fac_sh[name]["a"],
                          "g_inv": fac_sh[name]["g"]} for name in self.metas}
-        if self.tridiag:
-            fac_sh["__cross__"] = jax.tree.map(lambda _: rep,
-                                               state_abs["factors"]["__cross__"])
-            inv_sh["__tri__"] = jax.tree.map(lambda _: rep,
-                                             state_abs["inv"]["__tri__"])
+        if self.chain is not None:
+            cross, tri = TridiagChain.CROSS, TridiagChain.TRI
+            fac_sh[cross] = jax.tree.map(lambda _: rep,
+                                         state_abs["factors"][cross])
+            inv_sh[tri] = jax.tree.map(lambda _: rep,
+                                       state_abs["inv"][tri])
         diag_sh = jax.tree.map(
             lambda leaf, sh: rep if leaf.size == 0 else sh,
             state_abs["diag"], param_shardings)
@@ -196,32 +205,18 @@ class KFAC:
         (gprobes,) = vjp_fn(jnp.float32(1.0))
         recs = aux["recs"]
 
-        contrib = {}
-        for name, m in self.metas.items():
-            if m.kind == "embed":
-                tokens = sub["tokens"]
-                mask = sub.get("mask", jnp.ones(tokens.shape, jnp.float32))
-                a_c = F.embed_diag_counts(tokens, mask, m.d_in) / n
-                g_c = F.g_from_cotangent(gprobes[name], m, n)
-            elif m.kind == "head":
-                a_c = recs[name]["aa"] / n
-                g_c = recs[name]["gdiag"]
-            else:
-                rec = recs[name]
-                if "aa" in rec:
-                    a_c = rec["aa"] / n
-                else:
-                    a_c = F.outer_sum(rec["a"], m.a_kind, m.a_blocks,
-                                      expert=m.kind == "expert") / n
-                g_c = F.g_from_cotangent(gprobes[name], m, n)
-            contrib[name] = {"a": a_c, "g": g_c}
-        if self.tridiag:
-            contrib["__cross__"] = TRI.cross_contrib(
-                self.model, recs, gprobes, n)
-
+        # each block folds its own contribution into the decayed running
+        # factors (dense blocks may fuse this through the Pallas kernel)
         k = state["k_stats"] + 1
         eps = F.decay_eps(k, self.cfg.decay_cap)
-        factors = F.blend(state["factors"], contrib, eps)
+        factors = {
+            name: blk.update_factors(state["factors"][name], recs.get(name),
+                                     gprobes.get(name), sub, n, eps)
+            for name, blk in self.blocks.items()}
+        if self.chain is not None:
+            cross = TridiagChain.CROSS
+            factors[cross] = self.chain.update_factors(
+                state["factors"][cross], recs, gprobes, sub, n, eps)
 
         # diagonal running curvature for untagged (elementwise) params —
         # squared gradients (these cover <1% of parameters; the tagged
@@ -243,14 +238,13 @@ class KFAC:
     def _inverses_for(self, factors, gamma, prev=None):
         cfg = self.cfg
         out = {}
-        for name, m in self.metas.items():
-            out[name] = INV.damped_pair_inverse(
-                m, factors[name]["a"], factors[name]["g"], gamma,
+        for name, blk in self.blocks.items():
+            out[name] = blk.damped_inverse(
+                factors[name], gamma,
                 method=cfg.inverse_method, iters=cfg.ns_iters,
                 prev=None if prev is None else prev.get(name))
-        if self.tridiag:
-            out["__tri__"] = TRI.precompute(self.model, factors, gamma,
-                                            self.cfg.eta)
+        if self.chain is not None:
+            out[TridiagChain.TRI] = self.chain.damped_inverse(factors, gamma)
         return out
 
     def refresh_inverses(self, state, hot: bool = False):
@@ -266,10 +260,9 @@ class KFAC:
         inv = dict(state["inv"])
         prev = state["inv"] if cfg.inverse_method == "ns" and hot else None
         for name in names:
-            m = self.metas[name]
-            inv[name] = INV.damped_pair_inverse(
-                m, state["factors"][name]["a"], state["factors"][name]["g"],
-                state["gamma"], method=cfg.inverse_method,
+            inv[name] = self.blocks[name].damped_inverse(
+                state["factors"][name], state["gamma"],
+                method=cfg.inverse_method,
                 iters=cfg.ns_hot_iters if hot else cfg.ns_iters,
                 prev=None if prev is None else prev.get(name))
         return dict(state, inv=inv)
@@ -313,17 +306,17 @@ class KFAC:
             lambda kp, g, d: (g if self._is_tagged(kp)
                               else g / (d + lam_eta)),
             grads_reg, state["diag"])
-        if self.tridiag:
+        if self.chain is not None:
             vs = {name: T.get_path(grads_reg, self.metas[name].param_path)
                   for name in self.model.layer_order}
-            us = TRI.apply(self.model, inv["__tri__"], vs)
+            us = self.chain.precondition(inv[TridiagChain.TRI], vs)
             for name, u in us.items():
                 out = T.set_path(out, self.metas[name].param_path, u)
         else:
-            for name, m in self.metas.items():
-                v = T.get_path(grads_reg, m.param_path)
-                u = INV.apply_block_inverse(m, inv[name], v)
-                out = T.set_path(out, m.param_path, u)
+            for name, blk in self.blocks.items():
+                v = T.get_path(grads_reg, blk.meta.param_path)
+                u = blk.precondition(inv[name], v)
+                out = T.set_path(out, blk.meta.param_path, u)
         return T.tree_scale(out, -1.0)
 
     # ------------------------------------------------------------------

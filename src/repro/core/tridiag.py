@@ -23,10 +23,27 @@ from repro.core.inverse import eigh_inverse, pi_trace
 _EPS = 1e-8
 
 
-def _inv_sqrt(m, floor=1e-10):
+def _inv_sqrt(m, floor=1e-10, polish: int = 2):
+    """Symmetric inverse square root M^{-1/2}.
+
+    The f32 eigh seed alone leaves a ~cond(M)·eps residual that the App-B
+    Σ⁻¹ identity amplifies past usable tolerance, so the seed is polished
+    with Newton–Schulz steps Y ← ½ Y (3I − M Y²) (quadratic convergence:
+    each step squares the relative residual).  The polish iterates against
+    M itself, which diverges explosively on eigenvalues below the clamp
+    floor (roundoff-indefinite factors), so it is kept only when M's
+    spectrum is safely positive — otherwise the clamped seed stands.
+    """
     w, v = jnp.linalg.eigh(m)
     wi = jax.lax.rsqrt(jnp.maximum(w, floor))
-    return jnp.einsum("ij,j,kj->ik", v, wi, v)
+    y0 = jnp.einsum("ij,j,kj->ik", v, wi, v)
+    eye = jnp.eye(m.shape[-1], dtype=y0.dtype)
+    y = y0
+    for _ in range(polish):
+        y = 0.5 * y @ (3.0 * eye - (m @ y) @ y)
+        y = 0.5 * (y + y.T)
+    ok = w[..., 0] > floor        # eigh sorts ascending: min eigenvalue
+    return jnp.where(ok, y, y0)
 
 
 # ---------------------------------------------------------------------------

@@ -8,4 +8,6 @@
 #   flash_decode    — one-token decode vs a long (sequence-sharded) KV cache,
 #                     valid length via scalar prefetch
 # ops.py exposes jit'd wrappers with a pure-jnp fallback; ref.py holds the
-# oracles the tests sweep against (interpret=True on CPU).
+# oracles the tests sweep against (interpret=True on CPU); compat.py shims
+# renamed Pallas TPU APIs across JAX versions and hosts the tile_ok gate
+# the curvature blocks (core/blocks) use before routing onto these kernels.

@@ -1,0 +1,22 @@
+"""JAX version-compatibility shims for the Pallas TPU kernels.
+
+The TPU compiler-params dataclass was renamed across JAX releases
+(``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``); every kernel
+imports the alias from here so the package works on either side of the
+rename without per-file version checks.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tile_ok(*dims: int) -> bool:
+    """Whether every dim tiles cleanly into the kernels' 128-blocks.
+
+    min(128, d) is used as the block size, so d <= 128 needs only MXU lane
+    alignment (d % 8); larger dims must be whole multiples of 128.
+    """
+    return all(d % 128 == 0 or (0 < d <= 128 and d % 8 == 0) for d in dims)

@@ -136,11 +136,18 @@ def _split_computations(text: str) -> Dict[str, List[str]]:
 
 
 def _operands(rest: str) -> List[str]:
-    """Operand names from the op's (...) argument list."""
+    """Operand names from the op's (...) argument list.
+
+    Operands are split on top-level commas only — commas inside layout
+    braces (``{1,0}``), shape brackets (``[2,3]``) or nested parens (tuple
+    types) are part of the operand.  Each operand may be just ``%name`` or a
+    typed ``f32[2,3]{1,0} %name``; the ``%``-token is the name.
+    """
     i = rest.find("(")
     if i < 0:
         return []
-    depth = 0
+    depth = 0       # () nesting; splitting happens at depth 1
+    brack = 0       # {} / [] nesting; commas inside are not separators
     out = []
     tok = []
     for ch in rest[i:]:
@@ -155,12 +162,22 @@ def _operands(rest: str) -> List[str]:
                     out.append("".join(tok).strip())
                 break
         if depth >= 1:
-            if ch == "," and depth == 1:
+            if ch in "{[":
+                brack += 1
+            elif ch in "}]":
+                brack -= 1
+            if ch == "," and depth == 1 and brack == 0:
                 out.append("".join(tok).strip())
                 tok = []
             else:
                 tok.append(ch)
-    return [o.lstrip("%") for o in out if o.strip().startswith("%")]
+    names = []
+    for o in out:
+        for piece in o.split():
+            if piece.startswith("%"):
+                names.append(piece.lstrip("%"))
+                break
+    return names
 
 
 def analyze(text: str, entry: Optional[str] = None) -> Dict[str, float]:

@@ -69,6 +69,10 @@ class Trainer:
     def fit(self, params, data, steps: int, start_step: int = 0,
             log=print) -> Dict[str, Any]:
         cfg = self.opt.cfg
+        if cfg.kernel_backend != "xla":
+            log(f"[trainer] curvature blocks on kernel_backend="
+                f"{cfg.kernel_backend} (interpret="
+                f"{jax.default_backend() != 'tpu'})")
         batch0 = data.batch(start_step)
         state = self.opt.init(params, batch0)
 

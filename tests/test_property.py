@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property tests skipped")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import factors as F
 from repro.core import inverse as INV
