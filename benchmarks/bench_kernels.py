@@ -1,7 +1,8 @@
 """Kernel microbenches (paper S8 cost model) through the *optimizer's own*
-entry points: a DenseKronecker curvature block's fused factor accumulation
-and two-sided preconditioning, under both `kernel_backend` settings, plus
-the Newton–Schulz inverse and attention reference rows.
+entry points: a DenseKronecker curvature block's fused factor accumulation,
+two-sided preconditioning and EKFAC eigenbasis apply (`rotate_rescale`),
+under both `kernel_backend` settings, plus the per-step eigen diagonal
+re-estimation, the Newton–Schulz inverse and attention reference rows.
 
 On this CPU container the Pallas rows run in interpret mode, so their
 wall-clock is correctness-only; on TPU the same code paths compile.  What
@@ -32,9 +33,9 @@ def _time(f, *args, iters=5):
     return (time.time() - t0) / iters * 1e6
 
 
-def _dense_block(d_in, d_out, backend):
+def _dense_block(d_in, d_out, backend, inv_mode="blkdiag"):
     meta = LayerMeta("bench", ("w",), d_in=d_in, d_out=d_out, kind="dense")
-    cfg = KFACConfig(kernel_backend=backend)
+    cfg = KFACConfig(kernel_backend=backend, inv_mode=inv_mode)
     return build_blocks({"bench": meta}, cfg)["bench"]
 
 
@@ -49,6 +50,8 @@ def run(backends=("xla", "pallas"), iters=5):
     v = jax.random.normal(jax.random.fold_in(key, 2), (d, d))
     a_inv = jnp.eye(d)
     g_inv = jnp.eye(d)
+    eig = {"qa": jnp.eye(d), "qg": jnp.eye(d),
+           "s": jnp.ones((d, d)), "damp": jnp.zeros((d, d))}
 
     for backend in backends:
         blk = _dense_block(d, d, backend)
@@ -65,6 +68,21 @@ def run(backends=("xla", "pallas"), iters=5):
         us = _time(g, v, iters=iters)
         rows.append((f"precondition_{d}_{backend}", us,
                      2 * 2 * d ** 3 / (us * 1e-6) / 1e9))
+
+        # the eigen-mode apply route: U = Q_A[(Q_Aᵀ V Q_G)/(s+damp)]Q_Gᵀ
+        eb = _dense_block(d, d, backend, inv_mode="eigen")
+        r = jax.jit(lambda vv, b=eb: b.precondition_eigen(eig, vv))
+        us = _time(r, v, iters=iters)
+        rows.append((f"rotate_rescale_{d}_{backend}", us,
+                     4 * 2 * d ** 3 / (us * 1e-6) / 1e9))
+
+    # the per-step EKFAC diagonal re-estimation (rotate + square + blend);
+    # an einsum path on every backend — one row, not one per backend
+    eb = _dense_block(d, d, "xla", inv_mode="eigen")
+    r2 = jax.jit(lambda vv, b=eb: b.rescale_step(eig, vv, jnp.float32(0.95)))
+    us = _time(r2, v, iters=iters)
+    rows.append((f"eigen_rescale_{d}", us,
+                 2 * 2 * d ** 3 / (us * 1e-6) / 1e9))
 
     m = jax.random.normal(jax.random.PRNGKey(1), (d, d))
     m = m @ m.T / d + jnp.eye(d)

@@ -32,6 +32,7 @@ def run_kfac(steps=30, inv_mode="blkdiag", momentum=True, rescale=True,
     state = opt.init(params, batch)
     stats = jax.jit(opt.stats_grads)
     refresh = jax.jit(opt.refresh_inverses)
+    rescale = jax.jit(opt.rescale_step)
     update = jax.jit(lambda s, p, g, b, r: opt.apply_update(s, p, g, b, r))
     lam = jax.jit(opt.lambda_step)
     losses, t0 = [], time.time()
@@ -40,6 +41,8 @@ def run_kfac(steps=30, inv_mode="blkdiag", momentum=True, rescale=True,
         state, grads, metr = stats(state, params, batch, rng)
         if step % cfg.t3 == 0 or step < 3:
             state = refresh(state)
+        if inv_mode == "eigen":
+            state = rescale(state, grads)
         params, state, _ = update(state, params, grads, batch, rng)
         if (step + 1) % cfg.t1 == 0:
             state, _ = lam(state, params, batch, rng)
@@ -74,6 +77,8 @@ def run(steps=30):
     rows.append(("kfac_blkdiag", secs / steps * 1e6, kf[-1]))
     kf, secs = run_kfac(steps, "tridiag")
     rows.append(("kfac_tridiag", secs / steps * 1e6, kf[-1]))
+    kf, secs = run_kfac(steps, "eigen")
+    rows.append(("kfac_eigen", secs / steps * 1e6, kf[-1]))
     kf, secs = run_kfac(steps, "blkdiag", momentum=False)
     rows.append(("kfac_no_momentum", secs / steps * 1e6, kf[-1]))
     return rows

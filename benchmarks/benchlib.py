@@ -1,5 +1,32 @@
-"""Shared helpers for the benchmark harnesses."""
+"""Shared helpers for the benchmark harnesses.
+
+Machine-readable output — the ``BENCH_*.json`` schema
+-----------------------------------------------------
+``benchmarks/run.py`` writes one JSON file per tracked suite at the repo
+root (``BENCH_kernels.json``, ``BENCH_optimizer.json``) via
+:func:`emit_json`, so the bench trajectory can be diffed across commits and
+uploaded as a CI artifact.  Each file is::
+
+    {
+      "suite":   "<suite name>",            # e.g. "kernels"
+      "backend": "<jax.default_backend()>", # cpu | tpu | ...
+      "rows": [
+        {"name": "<row name>",              # e.g. "rotate_rescale_512_pallas"
+         "us_per_call": <float>,            # mean wall-clock per call, µs
+         "derived": <float>},               # row-specific: GFLOP/s for
+        ...                                 # kernel rows, final loss for
+      ]                                     # optimizer-race rows
+    }
+
+Row names are stable identifiers: kernel rows are
+``<entry_point>_<dim>[_<kernel_backend>]``; optimizer rows are
+``<optimizer>_<variant>``.  On CPU the Pallas rows run in interpret mode, so
+their wall-clock is correctness-only — compare like backends across commits,
+not backends against each other.
+"""
 from __future__ import annotations
+
+import json
 
 import jax
 
@@ -9,6 +36,19 @@ from repro.data.pipeline import SyntheticAutoencoderData
 from repro.models.mlp import MLP
 
 DIMS = [64, 48, 24, 12, 24, 48, 64]
+
+
+def emit_json(path, suite: str, rows) -> None:
+    """Write one suite's rows as the BENCH_*.json documented above."""
+    payload = {
+        "suite": suite,
+        "backend": jax.default_backend(),
+        "rows": [{"name": n, "us_per_call": float(us), "derived": float(dv)}
+                 for n, us, dv in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
 
 
 def partially_train(steps=12, dims=None):

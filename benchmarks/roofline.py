@@ -149,6 +149,7 @@ def run():
     for r in ok:
         out.append((f"roofline_{r['arch']}_{r['shape']}_frac", 0.0,
                     r["roofline_fraction"]))
+    RESULTS.mkdir(parents=True, exist_ok=True)
     (RESULTS / "roofline.md").write_text(markdown(rows))
     (RESULTS / "roofline.json").write_text(json.dumps(rows, indent=1))
     return out

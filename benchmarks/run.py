@@ -1,18 +1,29 @@
 """Benchmark harness entry — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Heavy multi-pod numbers come from
-the dry-run artifacts (see repro.launch.dryrun + benchmarks.roofline).
+Prints ``name,us_per_call,derived`` CSV; the kernel and optimizer-race
+suites additionally land as machine-readable ``BENCH_kernels.json`` /
+``BENCH_optimizer.json`` at the repo root (schema in benchlib's docstring),
+so the bench trajectory is diffable across commits.  Heavy multi-pod numbers
+come from the dry-run artifacts (see repro.launch.dryrun +
+benchmarks.roofline).
 """
 from __future__ import annotations
 
+import os
 import traceback
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# suite name -> BENCH_*.json filename for the machine-readable trajectory
+_JSON_SUITES = {"kernels": "BENCH_kernels.json",
+                "optimizer_race": "BENCH_optimizer.json"}
 
 
 def main() -> None:
     suites = []
     from benchmarks import (bench_optimizer_race, bench_damping,
                             bench_fisher_quality, bench_batch_scaling,
-                            bench_kernels, roofline)
+                            bench_kernels, benchlib, roofline)
     suites = [
         ("optimizer_race", bench_optimizer_race.run),   # Fig. 10/11
         ("damping", bench_damping.run),                 # Fig. 7
@@ -22,13 +33,24 @@ def main() -> None:
         ("roofline", roofline.run),                     # dry-run derived
     ]
     print("name,us_per_call,derived")
+    failed = []
     for name, fn in suites:
         try:
-            for row in fn():
+            rows = list(fn())
+            for row in rows:
                 print(f"{row[0]},{row[1]:.0f},{row[2]:.4f}", flush=True)
+            if name in _JSON_SUITES:
+                benchlib.emit_json(os.path.join(_ROOT, _JSON_SUITES[name]),
+                                   name, rows)
         except Exception:  # noqa: BLE001
             print(f"{name},0,ERROR")
             traceback.print_exc()
+            failed.append(name)
+    # a broken tracked suite must fail the harness (and its CI job) rather
+    # than ship a stale/absent BENCH_*.json alongside a green exit code
+    tracked = [n for n in failed if n in _JSON_SUITES]
+    if tracked:
+        raise SystemExit(f"tracked bench suite(s) failed: {tracked}")
 
 
 if __name__ == '__main__':

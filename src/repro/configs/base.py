@@ -120,6 +120,10 @@ class KFACConfig:
     """The paper's optimizer hyper-parameters (section references in brackets)."""
 
     inv_mode: str = "blkdiag"         # blkdiag | tridiag      [S4.2 / S4.3]
+                                      # | eigen (EKFAC, 1806.03884): amortized
+                                      # factor eigenbases + per-step diagonal
+    eigen_decay: float = 0.95         # eigen mode: EMA decay of the
+                                      # eigenbasis second-moment diagonal s
     inverse_method: str = "ns"        # ns | eigh | solve      [S8 / App B]
     ns_iters: int = 12                # Newton-Schulz iterations (cold start)
     ns_hot_iters: int = 4             # when hot-started from previous inverse

@@ -146,6 +146,60 @@ class CurvatureBlock(abc.ABC):
         """``U = Ā⁻¹ V G⁻¹`` with this block's structure; v shaped like W."""
         return INV.apply_block_inverse(self.meta, inv, v)
 
+    # ------------------------------------------------------------------
+    # eigenbasis (EKFAC) path — George et al. 1806.03884
+    # ------------------------------------------------------------------
+    def eigen_state(self, fac, gamma):
+        """Amortized refresh: factor eigenbases + eigenbasis diagonals
+        ``{"qa", "qg", "s", "damp"}`` (``qa``/``qg`` None on diag sides)."""
+        return INV.eigen_pair_state(self.meta, fac["a"], fac["g"], gamma)
+
+    def eigen_identity(self):
+        """Pre-refresh placeholder with the post-refresh pytree structure:
+        identity bases and a unit diagonal (an identity preconditioner)."""
+        z = self.init_factors()
+
+        def basis(arr, kind):
+            if kind == "diag":
+                return None
+            return arr + jnp.eye(arr.shape[-1], dtype=jnp.float32)
+
+        m = self.meta
+        diag_shape = (*self.lead, m.a_dim, m.g_dim)
+        return {"qa": basis(z["a"], m.a_kind), "qg": basis(z["g"], m.g_kind),
+                "s": jnp.ones(diag_shape, jnp.float32),
+                "damp": jnp.zeros(diag_shape, jnp.float32)}
+
+    def eigen_state_multi(self, fac, gammas):
+        """Candidate-stacked eigen states (gamma sweep) from one eigh."""
+        return INV.eigen_pair_multi(self.meta, fac["a"], fac["g"], gammas)
+
+    def rescale_step(self, eig, grad, eps):
+        """Per-step second-moment update ``s ← εs + (1−ε)(Q_Aᵀ ∇ Q_G)²``."""
+        return INV.eigen_rescale(self.meta, eig, grad, eps)
+
+    def precondition_eigen(self, eig, v):
+        """``U = Q_A [ (Q_Aᵀ V Q_G) / (s + damp) ] Q_Gᵀ``; v shaped like W."""
+        return INV.apply_eigen(self.meta, eig, v)
+
+    def eigen_specs(self, mesh) -> Dict[str, Any]:
+        """Storage shardings for the eigen state: bases shard like their
+        factors; the eigenbasis diagonals shard their d_in axis over `data`
+        like the weight (no gathers in the rotate/rescale apply)."""
+        from jax.sharding import PartitionSpec as P
+        from repro.utils.sharding import pick_shard
+        m = self.meta
+        fs = self.factor_specs(mesh)
+        lead = []
+        if m.n_stack:
+            lead.append(None)
+        if m.n_expert:
+            lead.append(pick_shard(m.n_expert, mesh, "model"))
+        diag = P(*lead, pick_shard(m.a_dim, mesh, "data"), None)
+        return {"qa": None if m.a_kind == "diag" else fs["a"],
+                "qg": None if m.g_kind == "diag" else fs["g"],
+                "s": diag, "damp": diag}
+
 
 # ---------------------------------------------------------------------------
 # registry

@@ -26,6 +26,7 @@ from repro.core.blocks.base import CurvatureBlock, register
 from repro.kernels.compat import tile_ok
 from repro.kernels.factor_update import factor_update
 from repro.kernels.precond import precondition as precond_kernel
+from repro.kernels.rotate_rescale import rotate_rescale
 
 
 class KroneckerPair(CurvatureBlock):
@@ -115,3 +116,16 @@ class DenseKronecker(KroneckerPair):
                 fn = jax.vmap(fn)
             return fn(inv["a_inv"], v.astype(jnp.float32), inv["g_inv"])
         return super().precondition(inv, v)
+
+    # -- eigenbasis apply through the rotate_rescale kernel -------------
+    def precondition_eigen(self, eig, v):
+        m = self.meta
+        if (self.backend == "pallas" and tile_ok(m.a_dim, m.g_dim)
+                and v.shape[-2:] == (m.a_dim, m.g_dim)):
+            fn = lambda qa, vv, qg, sd: rotate_rescale(
+                qa, vv, qg, sd, lam=1e-12, interpret=self._interpret())
+            for _ in range(v.ndim - 2):      # vmap over stack/expert dims
+                fn = jax.vmap(fn)
+            return fn(eig["qa"], v.astype(jnp.float32), eig["qg"],
+                      eig["s"] + eig["damp"])
+        return super().precondition_eigen(eig, v)

@@ -11,6 +11,17 @@ Inversion methods:
                 the previous inverse
   * ``solve`` — (used only in tests) dense jnp.linalg.inv
 
+Eigenbasis (EKFAC) path — George et al., 1806.03884: instead of damped
+factor *inverses*, :func:`eigen_pair_state` keeps the Kronecker
+**eigenbases** ``Q_A, Q_G`` on the amortized T3 schedule plus a per-entry
+diagonal in that basis.  The diagonal splits into ``s`` (second moments,
+re-estimated every step from the rotated gradient — :func:`eigen_rescale`)
+and ``damp`` (the factored-Tikhonov diagonal ``(γ/π)λ_A + πγλ_G + γ²``,
+amortized with the bases), so right after a refresh
+``s + damp = (λ_A + πγ)(λ_G + γ/π)`` and :func:`apply_eigen` reproduces the
+``eigh`` inverse exactly, while between refreshes the scaling tracks the
+live gradients at diagonal cost.
+
 All routines are batched over arbitrary leading dims (layer stacks, experts,
 TP blocks) — inverses of stacked factors are one batched kernel.
 """
@@ -113,6 +124,106 @@ def damped_pair_inverse(meta: LayerMeta, a, g, gamma, *, method="eigh",
                            iters=iters,
                            prev=None if prev is None else prev.get("g_inv"))
     return {"a_inv": a_inv, "g_inv": g_inv}
+
+
+# ---------------------------------------------------------------------------
+# eigenbasis (EKFAC) state:  F ≈ (Q_A ⊗ Q_G) diag(s + damp) (Q_A ⊗ Q_G)ᵀ
+# ---------------------------------------------------------------------------
+
+def eigh_basis(arr, kind: str):
+    """Eigendecomposition of one factor: ``(q, w)``.
+
+    ``q`` is the orthonormal eigenbasis (``None`` for diag factors — already
+    in their eigenbasis, so rotation is the identity); ``w`` the eigenvalues
+    flattened to ``(*lead, dim)`` (block factors concatenate their per-block
+    spectra, matching the flat layout :func:`apply_eigen` rotates into).
+    """
+    if kind == "diag":
+        return None, jnp.maximum(arr, 0.0)
+    w, q = jnp.linalg.eigh(arr)
+    if kind == "block":
+        w = w.reshape(*w.shape[:-2], -1)
+    return q, jnp.maximum(w, 0.0)          # clip eigh's tiny negatives (PSD)
+
+
+def _rot_left(q, kind: str, v, adjoint: bool):
+    """Rotate along d_in: ``Qᵀ v`` (adjoint) or ``Q v``; None = identity."""
+    if q is None:
+        return v
+    return _mul_left(jnp.swapaxes(q, -1, -2) if adjoint else q, kind, v)
+
+
+def _rot_right(q, kind: str, v, adjoint: bool):
+    """Rotate along d_out: ``v Q`` (adjoint) or ``v Qᵀ``; None = identity."""
+    if q is None:
+        return v
+    return _mul_right(q if adjoint else jnp.swapaxes(q, -1, -2), kind, v)
+
+
+def rotate_eigen(meta: LayerMeta, qa, qg, v, *, adjoint: bool):
+    """``Q_Aᵀ V Q_G`` (adjoint=True: into the eigenbasis) or ``Q_A V Q_Gᵀ``."""
+    u = _rot_left(qa, meta.a_kind, v, adjoint)
+    return _rot_right(qg, meta.g_kind, u, adjoint)
+
+
+def _eigen_parts(meta: LayerMeta, a, g):
+    """The gamma-independent pieces: bases, eigenvalue column/row, pi."""
+    qa, wa = eigh_basis(a, meta.a_kind)
+    qg, wg = eigh_basis(g, meta.g_kind)
+    pi = pi_trace(a, meta.a_kind, meta.a_dim, g, meta.g_kind, meta.g_dim)
+    return qa, qg, wa[..., :, None], wg[..., None, :], pi
+
+
+def _eigen_damp(wa_col, wg_row, pi, gamma):
+    """Factored-Tikhonov diagonal ``(γ/π)λ_A + πγλ_G + γ²`` (broadcastable)."""
+    gamma = jnp.asarray(gamma, jnp.float32)
+    return ((gamma / pi)[..., None, None] * wa_col
+            + (pi * gamma)[..., None, None] * wg_row + jnp.square(gamma))
+
+
+def eigen_pair_state(meta: LayerMeta, a, g, gamma):
+    """Amortized EKFAC state of one block: bases + eigenbasis diagonals.
+
+    Returns ``{"qa", "qg", "s", "damp"}`` where ``s`` is initialized to the
+    Kronecker eigenvalue products ``λ_A,i λ_G,j`` (the exact Fisher diagonal
+    in this basis) and ``damp`` carries the factored-Tikhonov cross terms, so
+    dividing by ``s + damp`` equals the ``eigh`` factor-inverse apply until
+    :func:`eigen_rescale` starts re-estimating ``s`` from live gradients.
+    """
+    qa, qg, wa_col, wg_row, pi = _eigen_parts(meta, a, g)
+    s = wa_col * wg_row
+    damp = jnp.broadcast_to(_eigen_damp(wa_col, wg_row, pi, gamma), s.shape)
+    return {"qa": qa, "qg": qg, "s": s, "damp": damp}
+
+
+def eigen_pair_multi(meta: LayerMeta, a, g, gammas):
+    """Candidate-stacked eigen states for the S6.6 gamma sweep, sharing ONE
+    eigendecomposition per factor — only ``damp`` depends on gamma, so the
+    bases/diagonals are broadcast across the leading candidate axis instead
+    of recomputed per candidate."""
+    qa, qg, wa_col, wg_row, pi = _eigen_parts(meta, a, g)
+    s = wa_col * wg_row
+    damp = jax.vmap(lambda gm: jnp.broadcast_to(
+        _eigen_damp(wa_col, wg_row, pi, gm), s.shape))(gammas)
+    n = gammas.shape[0]
+    tile = lambda x: (None if x is None
+                      else jnp.broadcast_to(x[None], (n, *x.shape)))
+    return {"qa": tile(qa), "qg": tile(qg), "s": tile(s), "damp": damp}
+
+
+def eigen_rescale(meta: LayerMeta, eig, grad, eps):
+    """Per-step EKFAC diagonal update: ``s ← εs + (1−ε)(Q_Aᵀ ∇ Q_G)²``."""
+    t = rotate_eigen(meta, eig["qa"], eig["qg"],
+                     grad.astype(jnp.float32), adjoint=True)
+    return dict(eig, s=eps * eig["s"] + (1.0 - eps) * jnp.square(t))
+
+
+def apply_eigen(meta: LayerMeta, eig, v, floor: float = 1e-12):
+    """``U = Q_A [ (Q_Aᵀ V Q_G) / (s + damp) ] Q_Gᵀ``; v shaped like W."""
+    t = rotate_eigen(meta, eig["qa"], eig["qg"],
+                     v.astype(jnp.float32), adjoint=True)
+    t = t / (eig["s"] + eig["damp"] + floor)
+    return rotate_eigen(meta, eig["qa"], eig["qg"], t, adjoint=False)
 
 
 # ---------------------------------------------------------------------------

@@ -11,6 +11,13 @@ The trainer composes four entry points per the paper's schedule:
   ``apply_update``      every step: preconditioning, exact-F re-scaling and
                         momentum (S6.4/S7), candidate selection by M(δ).
   ``lambda_step``       every T1 steps: reduction ratio rho + LM rule (S6.5).
+  ``rescale_step``      eigen mode only, every step: EKFAC second-moment
+                        diagonal update in the amortized eigenbases
+                        (George et al. 1806.03884); no-op otherwise.
+
+With ``KFACConfig.inv_mode == "eigen"``, ``refresh_inverses`` computes factor
+*eigenbases* instead of damped inverses, and preconditioning rotates into
+that basis, rescales by the per-step diagonal, and rotates back.
 
 Module map: every per-layer behavior (factor layout, statistics, damped
 inverses, preconditioner apply) lives in a ``CurvatureBlock`` from
@@ -64,6 +71,9 @@ class KFAC:
         if cfg.kernel_backend not in ("xla", "pallas"):
             raise ValueError(f"unknown kernel_backend {cfg.kernel_backend!r}"
                              " (expected 'xla' or 'pallas')")
+        if cfg.inv_mode not in ("blkdiag", "tridiag", "eigen"):
+            raise ValueError(f"unknown inv_mode {cfg.inv_mode!r}"
+                             " (expected 'blkdiag', 'tridiag' or 'eigen')")
         self.model = model
         self.cfg = cfg
         self.mesh = mesh
@@ -73,6 +83,7 @@ class KFAC:
         self.tagged = {m.param_path for m in self.metas.values()}
         self.tridiag = (cfg.inv_mode == "tridiag"
                         and hasattr(model, "layer_order"))
+        self.eigen = cfg.inv_mode == "eigen"
         self.blocks = build_blocks(self.metas, cfg)
         self.chain = TridiagChain(model, cfg) if self.tridiag else None
         self._probe_shapes = None
@@ -123,6 +134,9 @@ class KFAC:
         return state
 
     def _identity_inverses(self):
+        if self.eigen:
+            return {name: blk.eigen_identity()
+                    for name, blk in self.blocks.items()}
         out = {name: blk.identity_inverse()
                for name, blk in self.blocks.items()}
         if self.chain is not None:
@@ -141,8 +155,17 @@ class KFAC:
         fac_sh = {name: {"a": NamedSharding(mesh, fs[name]["a"]),
                          "g": NamedSharding(mesh, fs[name]["g"])}
                   for name in self.metas}
-        inv_sh = {name: {"a_inv": fac_sh[name]["a"],
-                         "g_inv": fac_sh[name]["g"]} for name in self.metas}
+        if self.eigen:
+            # eigenbases shard like their factors; the eigenbasis diagonals
+            # like the weight (None entries pair with the identity bases)
+            inv_sh = {
+                name: {k: (None if spec is None else NamedSharding(mesh, spec))
+                       for k, spec in blk.eigen_specs(mesh).items()}
+                for name, blk in self.blocks.items()}
+        else:
+            inv_sh = {name: {"a_inv": fac_sh[name]["a"],
+                             "g_inv": fac_sh[name]["g"]}
+                      for name in self.metas}
         if self.chain is not None:
             cross, tri = TridiagChain.CROSS, TridiagChain.TRI
             fac_sh[cross] = jax.tree.map(lambda _: rep,
@@ -237,6 +260,9 @@ class KFAC:
     # ------------------------------------------------------------------
     def _inverses_for(self, factors, gamma, prev=None):
         cfg = self.cfg
+        if self.eigen:
+            return {name: blk.eigen_state(factors[name], gamma)
+                    for name, blk in self.blocks.items()}
         out = {}
         for name, blk in self.blocks.items():
             out[name] = blk.damped_inverse(
@@ -258,6 +284,11 @@ class KFAC:
         lands on each step instead of spiking every T3 steps."""
         cfg = self.cfg
         inv = dict(state["inv"])
+        if self.eigen:
+            for name in names:
+                inv[name] = self.blocks[name].eigen_state(
+                    state["factors"][name], state["gamma"])
+            return dict(state, inv=inv)
         prev = state["inv"] if cfg.inverse_method == "ns" and hot else None
         for name in names:
             inv[name] = self.blocks[name].damped_inverse(
@@ -265,6 +296,20 @@ class KFAC:
                 method=cfg.inverse_method,
                 iters=cfg.ns_hot_iters if hot else cfg.ns_iters,
                 prev=None if prev is None else prev.get(name))
+        return dict(state, inv=inv)
+
+    def rescale_step(self, state, grads):
+        """Eigen mode, every step: re-estimate each block's eigenbasis
+        second-moment diagonal from the current gradient (EKFAC's cheap
+        half — the bases stay on the amortized T3 schedule).  No-op in the
+        other inv_modes."""
+        if not self.eigen:
+            return state
+        eps = jnp.float32(self.cfg.eigen_decay)
+        inv = dict(state["inv"])
+        for name, blk in self.blocks.items():
+            v = T.get_path(grads, blk.meta.param_path)
+            inv[name] = blk.rescale_step(inv[name], v, eps)
         return dict(state, inv=inv)
 
     def stagger_groups(self):
@@ -284,8 +329,16 @@ class KFAC:
         return dict(state, loss_prev=lt), grads, metrics
 
     def refresh_multi(self, state):
-        """Stacked inverses for the 3 gamma candidates (S6.6), via vmap."""
+        """Stacked inverses for the 3 gamma candidates (S6.6), via vmap.
+
+        Eigen mode shares one eigendecomposition across the candidates —
+        the bases are gamma-independent; only the damp diagonal varies."""
         gammas = D.gamma_candidates(state["gamma"], self._omega2())
+        if self.eigen:
+            inv3 = {name: blk.eigen_state_multi(state["factors"][name],
+                                                gammas)
+                    for name, blk in self.blocks.items()}
+            return gammas, inv3
         inv3 = jax.vmap(lambda g: self._inverses_for(state["factors"], g))(
             gammas)
         return gammas, inv3
@@ -315,7 +368,8 @@ class KFAC:
         else:
             for name, blk in self.blocks.items():
                 v = T.get_path(grads_reg, blk.meta.param_path)
-                u = blk.precondition(inv[name], v)
+                u = (blk.precondition_eigen(inv[name], v) if self.eigen
+                     else blk.precondition(inv[name], v))
                 out = T.set_path(out, blk.meta.param_path, u)
         return T.tree_scale(out, -1.0)
 

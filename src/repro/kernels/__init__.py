@@ -3,6 +3,8 @@
 #   matmul          — tiled MXU matmul with scale/accumulate epilogue
 #   ns_step         — Newton–Schulz inverse iteration X <- X(2I − MX)
 #   precond         — two-sided preconditioning U = Ā⁻¹ V G⁻¹
+#   rotate_rescale  — EKFAC eigenbasis apply Q_A[(Q_AᵀVQ_G)/(s+λ)]Q_Gᵀ with
+#                     the damped rescale fused into the middle matmul
 #   flash_attention — fwd flash attention (GQA/causal/window/softcap) for the
 #                     model substrate's serving path
 #   flash_decode    — one-token decode vs a long (sequence-sharded) KV cache,

@@ -55,7 +55,8 @@ def main(argv=None):
     ap.add_argument("--multi_pod", action="store_true")
     ap.add_argument("--ckpt_dir", default="")
     ap.add_argument("--lambda_init", type=float, default=10.0)
-    ap.add_argument("--inv_mode", default="blkdiag")
+    ap.add_argument("--inv_mode", default="blkdiag",
+                    choices=["blkdiag", "tridiag", "eigen"])
     ap.add_argument("--tau1", type=float, default=1.0)
     args = ap.parse_args(argv)
 

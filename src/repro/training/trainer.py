@@ -40,6 +40,8 @@ class Trainer:
 
         self._stats = jax.jit(opt.stats_grads)
         self._grads_only = jax.jit(opt.grads_only)
+        self._rescale = jax.jit(opt.rescale_step) if opt.cfg.inv_mode == \
+            "eigen" else None
         self._refresh = jax.jit(lambda s: opt.refresh_inverses(s, hot=True))
         self._stagger = opt.stagger_groups()
         self._refresh_sub = {
@@ -111,6 +113,10 @@ class Trainer:
                     state = self._refresh_sub[step % cfg.t3](state)
                 elif step % cfg.t3 == 0:
                     state = self._refresh(state)
+                if self._rescale is not None:
+                    # eigen mode: per-step EKFAC diagonal re-estimation in
+                    # the (amortized) eigenbases
+                    state = self._rescale(state, grads)
                 new_params, state, um = self._update(
                     state, params, grads, batch, rng)
 

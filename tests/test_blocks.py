@@ -238,6 +238,163 @@ def test_dense_precondition_pallas_stacked_vmaps():
 
 
 # ---------------------------------------------------------------------------
+# eigen (EKFAC) path: eigen_state right after a refresh must reproduce the
+# eigh damped-inverse apply; rotate_rescale kernel must match the einsum path
+# ---------------------------------------------------------------------------
+
+CFG_EIGEN = KFACConfig(inv_mode="eigen")
+
+
+def _eigen_factors(meta, seed):
+    """SPD/positive factors matching the meta's per-side kinds."""
+    def one(dim, kind, blocks, s):
+        if kind == "diag":
+            return jnp.abs(jax.random.normal(jax.random.PRNGKey(s),
+                                             (dim,))) + 0.5
+        if kind == "block":
+            x = jax.random.normal(jax.random.PRNGKey(s), (4 * dim, dim))
+            return F.outer_sum(x, "block", blocks) / (4 * dim)
+        if meta.n_expert:
+            return jnp.stack([_spd(s + e, dim) for e in range(meta.n_expert)])
+        return _spd(s, dim)
+
+    return {"a": one(meta.a_dim, meta.a_kind, meta.a_blocks, seed),
+            "g": one(meta.g_dim, meta.g_kind, meta.g_blocks, seed + 1)}
+
+
+@pytest.mark.parametrize("meta", [
+    _meta(d_in=6, d_out=4),
+    _meta(d_in=8, d_out=4, a_kind="block", a_blocks=2),
+    _meta(d_in=5, d_out=4, a_kind="diag"),
+    _meta(kind="embed", d_in=7, d_out=3, a_kind="diag"),
+    _meta(kind="head", d_in=6, d_out=3, g_kind="diag"),
+    _meta(kind="expert", d_in=5, d_out=4, n_expert=3),
+], ids=["dense", "blockdiag", "diagfactor", "embed", "head", "expert"])
+def test_eigen_state_matches_eigh_preconditioner(meta):
+    """With s initialized from the exact factor eigenvalues (what
+    eigen_state does at refresh), the eigenbasis apply IS the eigh path."""
+    blk = B.resolve(meta)(meta, CFG_EIGEN)
+    fac = _eigen_factors(meta, 60)
+    gamma = 0.3
+    inv = blk.damped_inverse(fac, gamma, method="eigh")
+    eig = blk.eigen_state(fac, gamma)
+    shape = ((meta.n_expert,) if meta.n_expert else ()) + (meta.a_dim,
+                                                           meta.g_dim)
+    v = jax.random.normal(jax.random.PRNGKey(62), shape)
+    np.testing.assert_allclose(blk.precondition_eigen(eig, v),
+                               blk.precondition(inv, v),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_eigen_rescale_tracks_rotated_gradient():
+    """eps=0 replaces s with the squared eigenbasis-rotated gradient; the
+    blend interpolates linearly in between."""
+    from repro.core import inverse as INV
+    meta = _meta(d_in=6, d_out=4)
+    blk = B.resolve(meta)(meta, CFG_EIGEN)
+    eig = blk.eigen_state(_eigen_factors(meta, 70), 0.2)
+    g = jax.random.normal(jax.random.PRNGKey(71), (meta.a_dim, meta.g_dim))
+    t2 = jnp.square(INV.rotate_eigen(meta, eig["qa"], eig["qg"], g,
+                                     adjoint=True))
+    e0 = blk.rescale_step(eig, g, jnp.float32(0.0))
+    np.testing.assert_allclose(e0["s"], t2, rtol=1e-5, atol=1e-6)
+    e_half = blk.rescale_step(eig, g, jnp.float32(0.5))
+    np.testing.assert_allclose(e_half["s"], 0.5 * eig["s"] + 0.5 * t2,
+                               rtol=1e-5, atol=1e-6)
+    # bases and the amortized damping are untouched by the per-step update
+    np.testing.assert_allclose(e0["qa"], eig["qa"])
+    np.testing.assert_allclose(e0["damp"], eig["damp"])
+
+
+def test_eigen_rotation_is_orthogonal():
+    """Rotating in and straight back out is the identity (Q orthonormal)."""
+    from repro.core import inverse as INV
+    meta = _meta(d_in=8, d_out=4, a_kind="block", a_blocks=2)
+    blk = B.resolve(meta)(meta, CFG_EIGEN)
+    eig = blk.eigen_state(_eigen_factors(meta, 80), 0.1)
+    v = jax.random.normal(jax.random.PRNGKey(81), (meta.a_dim, meta.g_dim))
+    t = INV.rotate_eigen(meta, eig["qa"], eig["qg"], v, adjoint=True)
+    back = INV.rotate_eigen(meta, eig["qa"], eig["qg"], t, adjoint=False)
+    np.testing.assert_allclose(back, v, rtol=1e-5, atol=1e-5)
+
+
+def test_rotate_rescale_pallas_matches_xla():
+    """Acceptance: pallas vs xla eigen apply agree to <= 1e-5."""
+    meta = _meta(d_in=64, d_out=32)
+    blk_x = B.resolve(meta)(meta, CFG_EIGEN)
+    blk_p = B.resolve(meta)(meta, CFG_EIGEN.replace(kernel_backend="pallas"))
+    eig = blk_x.eigen_state(_eigen_factors(meta, 90), 0.3)
+    v = jax.random.normal(jax.random.PRNGKey(91), (meta.a_dim, meta.g_dim))
+    want = blk_x.precondition_eigen(eig, v)
+    got = jax.jit(blk_p.precondition_eigen)(eig, v)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_rotate_rescale_pallas_stacked_vmaps():
+    ns = 3
+    meta = _meta(d_in=32, d_out=16, n_stack=ns)
+    blk_x = B.resolve(meta)(meta, CFG_EIGEN)
+    blk_p = B.resolve(meta)(meta, CFG_EIGEN.replace(kernel_backend="pallas"))
+    a = jnp.stack([_spd(100 + i, meta.a_dim) for i in range(ns)])
+    g = jnp.stack([_spd(110 + i, meta.g_dim) for i in range(ns)])
+    eig = blk_x.eigen_state({"a": a, "g": g}, 0.4)
+    v = jax.random.normal(jax.random.PRNGKey(112),
+                          (ns, meta.a_dim, meta.g_dim))
+    want = blk_x.precondition_eigen(eig, v)
+    got = blk_p.precondition_eigen(eig, v)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_rotate_rescale_pallas_ragged_falls_back():
+    meta = _meta(d_in=13, d_out=9)        # no 8-alignment: einsum fallback
+    blk_x = B.resolve(meta)(meta, CFG_EIGEN)
+    blk_p = B.resolve(meta)(meta, CFG_EIGEN.replace(kernel_backend="pallas"))
+    eig = blk_x.eigen_state(_eigen_factors(meta, 120), 0.2)
+    v = jax.random.normal(jax.random.PRNGKey(121), (meta.a_dim, meta.g_dim))
+    np.testing.assert_allclose(blk_p.precondition_eigen(eig, v),
+                               blk_x.precondition_eigen(eig, v),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_kfac_eigen_step_end_to_end():
+    """inv_mode="eigen" runs the full stats -> refresh -> rescale -> update
+    cycle and the first post-refresh update matches inv_mode="blkdiag" with
+    method="eigh" (identical preconditioner before any diagonal blending)."""
+    from repro.core.kfac import KFAC
+    from repro.models.mlp import MLP
+
+    dims = [8, 16, 8]
+    mlp = MLP(dims, loss="bernoulli")
+    params = mlp.init_params(jax.random.PRNGKey(0), sparse=False)
+    x = jax.random.bernoulli(jax.random.PRNGKey(1), 0.5, (64, dims[0])
+                             ).astype(jnp.float32)
+    batch = {"x": x, "y": x}
+    rng = jax.random.PRNGKey(2)
+
+    results = {}
+    for mode in ("blkdiag", "eigen"):
+        cfg = KFACConfig(inv_mode=mode, inverse_method="eigh", t1=0, t2=0)
+        opt = KFAC(mlp, cfg)
+        state = opt.init(params, batch)
+        state, grads, _ = jax.jit(opt.stats_grads)(state, params, batch, rng)
+        state = jax.jit(opt.refresh_inverses)(state)
+        new_params, state, _ = jax.jit(opt.apply_update)(
+            state, params, grads, batch, rng)
+        results[mode] = new_params
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4),
+        results["eigen"], results["blkdiag"])
+
+
+def test_kfac_rejects_unknown_inv_mode():
+    from repro.core.kfac import KFAC
+    from repro.models.mlp import MLP
+    mlp = MLP([4, 4], loss="bernoulli")
+    with pytest.raises(ValueError):
+        KFAC(mlp, KFACConfig(inv_mode="spectral"))
+
+
+# ---------------------------------------------------------------------------
 # end-to-end: a KFAC step with kernel_backend="pallas" matches "xla"
 # ---------------------------------------------------------------------------
 

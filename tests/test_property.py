@@ -106,3 +106,72 @@ def test_ns_vs_eigh_property(seed, d):
     e = INV.factor_inverse(a, "full", 0.3, method="eigh")
     n = INV.factor_inverse(a, "full", 0.3, method="ns", iters=30)
     np.testing.assert_allclose(e, n, rtol=5e-3, atol=5e-4)
+
+
+def _conditioned_spd(seed, d, cond):
+    """SPD matrix with eigenvalues log-spaced over exactly [1/cond, 1]."""
+    q, _ = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(seed), (d, d)))
+    w = jnp.logspace(-np.log10(cond), 0.0, d)
+    return jnp.einsum("ij,j,kj->ik", q, w, q)
+
+
+@given(seeds, dims, st.floats(min_value=1.0, max_value=1e6))
+def test_ns_vs_eigh_under_conditioning(seed, d, cond):
+    """ns/eigh inverses must agree across 6 decades of factor conditioning
+    (the damping keeps the *damped* matrix NS-friendly even when the raw
+    factor is nearly singular)."""
+    a = _conditioned_spd(seed, d, cond)
+    e = INV.factor_inverse(a, "full", 0.1, method="eigh")
+    n = INV.factor_inverse(a, "full", 0.1, method="ns", iters=40)
+    np.testing.assert_allclose(e, n, rtol=5e-3, atol=5e-4)
+
+
+@given(seeds, dims, st.floats(min_value=1e-6, max_value=1e3),
+       st.floats(min_value=1.0, max_value=1e6))
+def test_add_damp_preserves_psd(seed, d, damp, cond):
+    """_add_damp shifts the spectrum up by exactly `damp`: the damped factor
+    stays PSD with min eigenvalue >= damp (up to float tolerance)."""
+    a = _conditioned_spd(seed, d, cond)
+    damped = INV._add_damp(a, "full", jnp.float32(damp))
+    w = np.linalg.eigvalsh(np.asarray(damped))
+    assert w.min() >= damp * (1 - 1e-3) - 1e-6, (w.min(), damp)
+    # block/diag kinds damp each entry/block identically
+    diag = jnp.abs(jax.random.normal(jax.random.PRNGKey(seed + 1), (d,)))
+    ddiag = INV._add_damp(diag, "diag", jnp.float32(damp))
+    assert float(jnp.min(ddiag - diag)) >= damp * (1 - 1e-3) - 1e-6
+
+
+@given(seeds, dims, dims, st.floats(min_value=0.01, max_value=10.0))
+def test_eigen_matches_eigh_path_property(seed, da, dg, gamma):
+    """EKFAC invariant: with s initialized from the exact factor eigenvalues
+    (eigen_state at refresh), the eigenbasis apply equals the eigh damped
+    factor-inverse apply for any factor pair and damping."""
+    from repro.core.tags import LayerMeta
+    meta = LayerMeta("l", ("w",), d_in=da, d_out=dg)
+    a, g = _spd(seed, da), _spd(seed + 1, dg)
+    inv = INV.damped_pair_inverse(meta, a, g, gamma, method="eigh")
+    eig = INV.eigen_pair_state(meta, a, g, gamma)
+    v = jax.random.normal(jax.random.PRNGKey(seed + 2), (da, dg))
+    want = INV.apply_block_inverse(meta, inv, v)
+    got = INV.apply_eigen(meta, eig, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(seeds, dims, dims, st.floats(min_value=0.0, max_value=1.0))
+def test_eigen_rescale_fixed_point(seed, da, dg, eps):
+    """s is a fixed point of eigen_rescale exactly when the squared rotated
+    gradient equals s (the EMA's stationary condition), for any decay."""
+    from repro.core.tags import LayerMeta
+    meta = LayerMeta("l", ("w",), d_in=da, d_out=dg)
+    eig = INV.eigen_pair_state(meta, _spd(seed, da), _spd(seed + 1, dg), 0.3)
+    t = jnp.abs(jax.random.normal(jax.random.PRNGKey(seed + 2), (da, dg)))
+    # a gradient whose rotation is exactly sqrt(s): rotate sqrt(s) back out
+    g_fix = INV.rotate_eigen(meta, eig["qa"], eig["qg"], jnp.sqrt(eig["s"]),
+                             adjoint=False)
+    out = INV.eigen_rescale(meta, eig, g_fix, eps)
+    np.testing.assert_allclose(out["s"], eig["s"], rtol=1e-3, atol=1e-4)
+    # and blending toward a different target moves s monotonically toward it
+    g_other = INV.rotate_eigen(meta, eig["qa"], eig["qg"], t, adjoint=False)
+    out2 = INV.eigen_rescale(meta, eig, g_other, eps)
+    np.testing.assert_allclose(out2["s"], eps * eig["s"] + (1 - eps) * t ** 2,
+                               rtol=1e-3, atol=1e-4)
