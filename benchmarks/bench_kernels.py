@@ -76,6 +76,27 @@ def run(backends=("xla", "pallas"), iters=5):
         rows.append((f"rotate_rescale_{d}_{backend}", us,
                      4 * 2 * d ** 3 / (us * 1e-6) / 1e9))
 
+    # the KFC conv stats route (1602.01407): fused im2col + patch-factor
+    # accumulation straight from the raw input — the whisper conv1 shape
+    # family, through ConvKronecker.update_factors on both backends
+    from repro.models.conv import conv_meta
+    cb, ct, cc = 4, 1024, 128
+    cm = conv_meta("bench_conv", ("w",), spatial=(3,), stride=(1,),
+                   c_in=cc, d_out=d, padding="SAME")
+    cx = jax.random.normal(jax.random.fold_in(key, 3), (cb, ct, cc))
+    ccot = jax.random.normal(jax.random.fold_in(key, 4), (cb, ct, d)) / (
+        cb * ct)
+    cold = {"a": jnp.eye(cm.a_dim), "g": jnp.eye(d)}
+    cflop = 2 * cb * ct * (cm.a_dim ** 2 + d ** 2)
+    for backend in backends:
+        cfg = KFACConfig(kernel_backend=backend)
+        cblk = build_blocks({"c": cm}, cfg)["c"]
+        f = jax.jit(lambda eps, b=cblk: b.update_factors(
+            cold, {"cx": cx}, ccot, {}, cb * ct, eps))
+        us = _time(f, jnp.float32(0.95), iters=iters)
+        rows.append((f"patch_factor_{cm.a_dim}_{backend}", us,
+                     cflop / (us * 1e-6) / 1e9))
+
     # the per-step EKFAC diagonal re-estimation (rotate + square + blend);
     # an einsum path on every backend — one row, not one per backend
     eb = _dense_block(d, d, "xla", inv_mode="eigen")

@@ -56,9 +56,14 @@ class ModelConfig:
     encoder_layers: int = 0           # >0 -> enc-dec; n_layers = decoder layers
     encoder_seq: int = 1500           # number of (stubbed) audio frames
 
-    # --- modality frontend stubs ---
+    # --- modality frontends (real conv stems, KFC-preconditioned) ---
     frontend: str = "none"            # none | patch | audio
-    frontend_tokens: int = 0          # patch/frame count supplied by input_specs
+    frontend_tokens: int = 0          # patch/frame token count after the stem
+    n_mels: int = 80                  # audio: log-mel channels into the
+                                      # Conv1D stem (k=3 s=1, then k=3 s=2)
+    image_size: int = 0               # patch: square input image side
+    patch_size: int = 0               # patch: Conv2D patchifier kernel=stride
+    image_channels: int = 3           # patch: input image channels
 
     # --- misc ---
     norm_eps: float = 1e-6

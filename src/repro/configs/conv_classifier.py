@@ -1,0 +1,34 @@
+"""Conv classifier config — the KFC experimental family (1602.01407 §5).
+
+A small strided CNN + softmax head over synthetic class-template images
+(:class:`repro.data.pipeline.SyntheticImageData`), consumed by
+``repro.models.convnet.ConvNet``.  Like the autoencoder config this lives
+outside the 10 assigned LM architectures: it is the tier-1 vehicle for the
+``ConvKronecker`` curvature blocks (golden trajectories per ``inv_mode``,
+kernel parity, property tests) without the cost of the full whisper/vision
+frontends.
+"""
+from dataclasses import dataclass
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class ConvClassifierConfig:
+    name: str = "conv-classifier"
+    image_size: int = 32
+    channels: int = 3
+    n_classes: int = 10
+    # (out_channels, kernel, stride) per layer; "SAME" padding, strided
+    # downsampling (no pooling — every parameter sits in a Kronecker block)
+    conv: Tuple[Tuple[int, int, int], ...] = ((32, 3, 1), (32, 3, 2),
+                                              (64, 3, 2))
+    nonlin: str = "relu"
+
+
+CONFIG = ConvClassifierConfig()
+
+
+def reduced() -> ConvClassifierConfig:
+    return ConvClassifierConfig(name="conv-classifier-reduced",
+                                image_size=8, channels=2, n_classes=4,
+                                conv=((8, 3, 1), (8, 3, 2)), nonlin="relu")

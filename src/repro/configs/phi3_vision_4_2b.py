@@ -1,8 +1,11 @@
-"""phi-3-vision-4.2b [vlm]: phi3-mini backbone + CLIP frontend (stubbed).
+"""phi-3-vision-4.2b [vlm]: phi3-mini backbone + real Conv2D patch frontend.
 [hf:microsoft/Phi-3-vision-128k-instruct; hf]
 
-The transformer BACKBONE only; the vision frontend is a STUB — input_specs()
-provides precomputed patch embeddings which are fused (early fusion) with the
+The vision frontend is no longer a stub: ``input_specs()`` provides raw
+images of shape (batch, image_size, image_size, channels) and the model's
+own Conv2D patchifier (kernel = stride = patch_size, KFC-tagged and
+preconditioned by ``ConvKronecker``) embeds them into
+``(image_size/patch_size)²`` patch tokens, fused (early fusion) with the
 token embeddings.
 """
 from repro.configs.base import ModelConfig
@@ -18,7 +21,10 @@ CONFIG = ModelConfig(
     d_ff=8192,
     vocab_size=32064,
     frontend="patch",
-    frontend_tokens=576,          # 24x24 CLIP patch grid
+    frontend_tokens=576,          # 24x24 CLIP-style patch grid
+    image_size=336,
+    patch_size=14,
+    image_channels=3,
     skip_shapes=("long_500k",),
 )
 
@@ -26,5 +32,6 @@ CONFIG = ModelConfig(
 def reduced() -> ModelConfig:
     return CONFIG.replace(
         name="phi-3-vision-4.2b-reduced", n_layers=2, d_model=64, n_heads=4,
-        n_kv_heads=4, head_dim=16, d_ff=128, vocab_size=256, frontend_tokens=8,
+        n_kv_heads=4, head_dim=16, d_ff=128, vocab_size=256,
+        frontend_tokens=4, image_size=8, patch_size=4,
     )

@@ -1,7 +1,11 @@
-"""whisper-small [audio]: enc-dec, conv frontend (stub).  [arXiv:2212.04356; unverified]
+"""whisper-small [audio]: enc-dec with the real Conv1D mel stem.
+[arXiv:2212.04356; unverified]
 
-Backbone only: the conv/mel frontend is a STUB — input_specs() provides
-precomputed frame embeddings of shape (batch, encoder_seq, d_model).
+The encoder frontend is no longer a stub: ``input_specs()`` provides raw
+log-mel frames of shape (batch, 2*encoder_seq, n_mels) and the model's own
+two-layer Conv1D stem (k=3 s=1 then k=3 s=2, GELU after each) embeds and
+2x-downsamples them to (batch, encoder_seq, d_model).  Both convs are
+K-FAC-tagged and preconditioned by ``ConvKronecker`` (KFC, 1602.01407).
 n_layers counts decoder layers; encoder_layers the (full-attention) encoder.
 """
 from repro.configs.base import ModelConfig
@@ -20,6 +24,7 @@ CONFIG = ModelConfig(
     vocab_size=51865,
     frontend="audio",
     frontend_tokens=1500,
+    n_mels=80,
     skip_shapes=("long_500k",),
 )
 
@@ -28,5 +33,5 @@ def reduced() -> ModelConfig:
     return CONFIG.replace(
         name="whisper-small-reduced", n_layers=2, encoder_layers=2,
         encoder_seq=16, d_model=48, n_heads=3, n_kv_heads=3, head_dim=16,
-        d_ff=96, vocab_size=256, frontend_tokens=16,
+        d_ff=96, vocab_size=256, frontend_tokens=16, n_mels=8,
     )

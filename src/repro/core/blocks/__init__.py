@@ -3,12 +3,13 @@
 from repro.core.blocks.base import (CurvatureBlock, build_blocks, register,
                                     registered, resolve)
 from repro.core.blocks.chain import TridiagChain
+from repro.core.blocks.conv import ConvKronecker
 from repro.core.blocks.kron import (BlockDiagKronecker, DenseKronecker,
                                     DiagFactor, KroneckerPair)
 from repro.core.blocks.special import Embed, Expert, Head
 
 __all__ = [
     "CurvatureBlock", "KroneckerPair", "DenseKronecker", "BlockDiagKronecker",
-    "DiagFactor", "Embed", "Head", "Expert", "TridiagChain",
+    "DiagFactor", "ConvKronecker", "Embed", "Head", "Expert", "TridiagChain",
     "register", "registered", "resolve", "build_blocks",
 ]

@@ -41,6 +41,14 @@ class LayerMeta:
     has_bias: bool = False          # homogeneous coordinate appended to ā
     probe_tshard: bool = False      # context-parallel outputs: probe shards
                                     # the sequence dim (not the feature dim)
+    # convolution layers (kind == "conv", KFC — Grosse & Martens 1602.01407):
+    # the weight is stored as a (prod(conv_spatial)*conv_in [+1], d_out)
+    # matrix whose rows are tap-major patch features [k, c]; d_in is the
+    # flattened patch width prod(conv_spatial) * conv_in.
+    conv_spatial: Tuple[int, ...] = ()   # kernel spatial shape (K,) / (Kh, Kw)
+    conv_stride: Tuple[int, ...] = ()    # window strides, same rank
+    conv_in: int = 0                     # input channels C
+    conv_pad: str = "VALID"              # lax conv padding ("SAME" | "VALID")
 
     @property
     def a_dim(self) -> int:
@@ -87,6 +95,23 @@ class Tagger:
         a_sg = jax.lax.stop_gradient(a)
         rec = {"aa": fn(a_sg)} if fn is not None else {"a": a_sg}
         self.records[name] = rec
+        if name in self.probes:
+            s = s + self.probes[name]
+        return s
+
+    def tag_conv(self, name: str, x, s):
+        """Tag a convolution: ``x`` the RAW (pre-im2col) input
+        ``(B, *spatial, C)``, ``s`` the outputs ``(B, T_out, d_out)`` with the
+        spatial dims flattened.  Only the raw input is recorded — the
+        ``ConvKronecker`` block extracts patches itself (possibly fused into
+        the Pallas factor kernel), so collect mode never materializes the
+        im2col buffer in the record."""
+        if self.mode == "plain":
+            return s
+        if self.mode == "shapes":
+            self.records[name] = s
+            return s
+        self.records[name] = {"cx": jax.lax.stop_gradient(x)}
         if name in self.probes:
             s = s + self.probes[name]
         return s

@@ -96,23 +96,53 @@ class SyntheticAutoencoderData:
                 "y": _put(x, self.mesh, P(ba, None))}
 
 
-def make_vlm_batch(base: Dict, d_model: int, n_patches: int, mesh=None,
+class SyntheticImageData:
+    """Class-template images for the conv classifier: ``y`` picks one of
+    ``n_classes`` fixed random templates, ``x`` is that template plus pixel
+    noise — learnable, deterministic per (seed, step)."""
+
+    def __init__(self, image_size: int, channels: int, n_classes: int,
+                 n: int, seed: int = 0, noise: float = 0.3, mesh=None):
+        rng = np.random.default_rng(seed)
+        self.templates = rng.standard_normal(
+            (n_classes, image_size, image_size, channels)).astype(np.float32)
+        self.n_classes, self.n, self.noise = n_classes, n, noise
+        self.seed, self.mesh = seed, mesh
+
+    def batch(self, step: int, batch_size: Optional[int] = None):
+        bs = batch_size or self.n
+        rng = np.random.default_rng((self.seed, step))
+        y = rng.integers(0, self.n_classes, size=(bs,)).astype(np.int32)
+        x = (self.templates[y]
+             + self.noise * rng.standard_normal(
+                 self.templates[y].shape).astype(np.float32))
+        ba = batch_axes(self.mesh)
+        return {"x": _put(x, self.mesh, P(ba, None, None, None)),
+                "y": _put(y, self.mesh, P(ba))}
+
+
+def make_vlm_batch(base: Dict, image_size: int, channels: int, mesh=None,
                    step: int = 0):
+    """Raw images for the vision patch frontend (un-stubbed: the model's
+    own Conv2D patchifier embeds these)."""
     b = base["tokens"].shape[0]
     rng = np.random.default_rng((7, step))
-    patches = rng.standard_normal((b, n_patches, d_model)).astype(np.float32)
+    images = rng.standard_normal(
+        (b, image_size, image_size, channels)).astype(np.float32)
     ba = batch_axes(mesh)
     base = dict(base)
-    base["patches"] = _put(patches, mesh, P(ba, None, None))
+    base["images"] = _put(images, mesh, P(ba, None, None, None))
     return base
 
 
-def make_audio_batch(base: Dict, d_model: int, n_frames: int, mesh=None,
+def make_audio_batch(base: Dict, n_mels: int, n_frames: int, mesh=None,
                      step: int = 0):
+    """Raw log-mel frames for the audio frontend (un-stubbed: the model's
+    own Conv1D stem embeds and 2x-downsamples these)."""
     b = base["tokens"].shape[0]
     rng = np.random.default_rng((11, step))
-    frames = rng.standard_normal((b, n_frames, d_model)).astype(np.float32)
+    mels = rng.standard_normal((b, n_frames, n_mels)).astype(np.float32)
     ba = batch_axes(mesh)
     base = dict(base)
-    base["frames"] = _put(frames, mesh, P(ba, None, None))
+    base["mels"] = _put(mels, mesh, P(ba, None, None))
     return base

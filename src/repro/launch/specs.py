@@ -35,11 +35,12 @@ def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Dict:
         "labels": _sds((b, t), jnp.int32, mesh, P(*bs, None)),
     }
     if cfg.frontend == "patch":
-        out["patches"] = _sds((b, cfg.frontend_tokens, cfg.d_model),
-                              jnp.float32, mesh, P(*bs, None, None))
+        out["images"] = _sds((b, cfg.image_size, cfg.image_size,
+                              cfg.image_channels), jnp.float32, mesh,
+                             P(*bs, None, None, None))
     if cfg.frontend == "audio":
-        out["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model),
-                             jnp.float32, mesh, P(*bs, None, None))
+        out["mels"] = _sds((b, 2 * cfg.encoder_seq, cfg.n_mels),
+                           jnp.float32, mesh, P(*bs, None, None))
     return out
 
 

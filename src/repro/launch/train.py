@@ -27,7 +27,8 @@ from repro.training.trainer import Trainer
 
 
 class _ArchData:
-    """Wraps the token pipeline with the arch's modality frontend stubs."""
+    """Wraps the token pipeline with the arch's raw modality inputs
+    (images / mel frames; the model's own conv stems embed them)."""
 
     def __init__(self, cfg, base):
         self.cfg, self.base = cfg, base
@@ -35,11 +36,12 @@ class _ArchData:
     def batch(self, step):
         b = self.base.batch(step)
         if self.cfg.frontend == "patch":
-            b = make_vlm_batch(b, self.cfg.d_model, self.cfg.frontend_tokens,
-                               self.base.mesh, step)
+            b = make_vlm_batch(b, self.cfg.image_size,
+                               self.cfg.image_channels, self.base.mesh, step)
         if self.cfg.frontend == "audio":
-            b = make_audio_batch(b, self.cfg.d_model, self.cfg.encoder_seq,
-                                 self.base.mesh, step)
+            b = make_audio_batch(b, self.cfg.n_mels,
+                                 2 * self.cfg.encoder_seq, self.base.mesh,
+                                 step)
         return b
 
 

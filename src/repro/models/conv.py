@@ -1,0 +1,93 @@
+"""Convolution layers with KFC curvature tags (Grosse & Martens 1602.01407).
+
+A convolution is treated as a dense map over im2col *patches*: each spatial
+output location contributes one "token" whose features are the receptive
+field flattened tap-major (``feature = k * C + c``), so the weight lives as
+a ``(prod(K)*C [+1], d_out)`` matrix — the bias as a homogeneous last row,
+exactly the MLP convention — and every K-FAC code path (factor layout,
+damped inverses, eigen mode, the Pallas precondition kernels) applies
+unchanged.  The forward *computes* the conv as ``patches @ W`` so the
+weight-matrix gradient is ``Σ_t patch_t g_tᵀ`` by construction, consistent
+with the ``ConvKronecker`` factor statistics.
+
+The tap-major layout means ``W[:-1].reshape(*K, C, d_out)`` is a lax conv
+kernel in ``WIO`` / ``HWIO`` form; :func:`extract_patches` transposes
+``jax.lax.conv_general_dilated_patches`` (channel-major) into it.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import factors as F
+from repro.core.tags import LayerMeta, Tagger
+
+_DIM_NUMS = {1: ("NWC", "WIO", "NWC"), 2: ("NHWC", "HWIO", "NHWC")}
+
+
+def conv_out_len(t: int, k: int, stride: int, padding: str) -> int:
+    """Spatial output length of one conv dim (lax "SAME"/"VALID" rules)."""
+    if padding == "SAME":
+        return -(-t // stride)
+    return max(0, (t - k) // stride + 1)
+
+
+def extract_patches(x, spatial: Tuple[int, ...], stride: Tuple[int, ...],
+                    padding: str = "VALID"):
+    """im2col in the repo's tap-major layout.
+
+    x: ``(B, *S, C)`` -> ``(B, T_out, prod(K)*C)`` with feature index
+    ``k * C + c`` (spatial tap major, input channel minor — the row order of
+    the conv weight matrix).  ``jax.lax.conv_general_dilated_patches``
+    returns the channel-major order ``c * prod(K) + k``; this transposes it.
+    """
+    nd = len(spatial)
+    c = x.shape[-1]
+    p = jax.lax.conv_general_dilated_patches(
+        x, filter_shape=spatial, window_strides=stride, padding=padding,
+        dimension_numbers=_DIM_NUMS[nd])
+    b = x.shape[0]
+    t = int(np.prod(p.shape[1:-1]))
+    k = int(np.prod(spatial))
+    p = p.reshape(b, t, c, k)
+    return jnp.swapaxes(p, -1, -2).reshape(b, t, k * c)
+
+
+def append_homog(p):
+    """Homogeneous coordinate: ``â = [patch; 1]`` (bias = last weight row)."""
+    return jnp.concatenate(
+        [p, jnp.ones((*p.shape[:-1], 1), p.dtype)], axis=-1)
+
+
+def conv(tg: Tagger, name: str, w, x, *, spatial: Tuple[int, ...],
+         stride: Tuple[int, ...], padding: str = "VALID", bias: bool = True):
+    """K-FAC-tagged convolution: ``s = patches(x) @ W [+ b]``.
+
+    x: ``(B, *S, C)``; w: ``(prod(spatial)*C [+1], d_out)``.  Returns the
+    outputs with spatial dims flattened, ``(B, T_out, d_out)`` — frontends
+    consume them as a token sequence anyway.
+    """
+    p = extract_patches(x, spatial, stride, padding)
+    wm = w.astype(x.dtype)
+    s = p @ (wm[:-1] if bias else wm)
+    if bias:
+        s = s + wm[-1]
+    return tg.tag_conv(name, x, s)
+
+
+def conv_meta(name: str, path: Tuple, *, spatial: Tuple[int, ...],
+              stride: Tuple[int, ...], c_in: int, d_out: int,
+              padding: str = "VALID", bias: bool = True,
+              max_factor_dim: int = 8_192) -> LayerMeta:
+    """LayerMeta for one KFC conv block (kind="conv", tap-major weight)."""
+    d_in = int(np.prod(spatial)) * c_in
+    a_kind, a_blocks = F.factor_layout(d_in, False, 1, max_factor_dim)
+    g_kind, g_blocks = F.factor_layout(d_out, False, 1, max_factor_dim)
+    return LayerMeta(name=name, param_path=path, d_in=d_in, d_out=d_out,
+                     kind="conv", a_kind=a_kind, g_kind=g_kind,
+                     a_blocks=a_blocks, g_blocks=g_blocks, has_bias=bias,
+                     conv_spatial=tuple(spatial), conv_stride=tuple(stride),
+                     conv_in=c_in, conv_pad=padding)

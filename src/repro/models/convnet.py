@@ -1,0 +1,106 @@
+"""Small conv classifier — the KFC experimental family (1602.01407 §5).
+
+Strided KFC-tagged convolutions (no pooling: every parameter sits inside a
+Kronecker block), global average pool, one dense softmax head.  Serves the
+``conv_classifier`` config as the tier-1 conv analogue of the paper's deep
+autoencoder: small enough for CPU golden runs, but exercising the full
+``ConvKronecker`` path (patch statistics, homogeneous bias, every
+``inv_mode``) end to end through the real ``KFAC`` + ``Trainer`` loop.
+
+Same model contract as :class:`repro.models.mlp.MLP`: ``metas``, ``loss``
+(returning ``((loss_true, loss_sampled), aux)``), ``probe_shapes`` /
+``make_probes`` and ``logits`` for the exact-Fisher quadratic
+(``family="categorical"``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.conv_classifier import ConvClassifierConfig
+from repro.core.tags import LayerMeta, Tagger
+from repro.models import params as PM
+from repro.models.conv import conv, conv_meta, conv_out_len
+
+
+class ConvNet:
+    """KFC-tagged CNN classifier.  Input x: (B, H, W, C) images."""
+
+    def __init__(self, cfg: ConvClassifierConfig, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.nonlin = {"tanh": jnp.tanh, "relu": jax.nn.relu}[cfg.nonlin]
+        self.defs: Dict[str, PM.ParamDef] = {}
+        self.metas: Dict[str, LayerMeta] = {}
+        c_in = cfg.channels
+        self._stages = []
+        for i, (c_out, k, stride) in enumerate(cfg.conv):
+            name = f"conv{i}"
+            self.defs[name] = PM.ParamDef((k * k * c_in + 1, c_out), P(),
+                                          init="normal")
+            self.metas[name] = conv_meta(
+                name, (name,), spatial=(k, k), stride=(stride, stride),
+                c_in=c_in, d_out=c_out, padding="SAME", bias=True)
+            self._stages.append((name, c_in, (k, k), (stride, stride)))
+            c_in = c_out
+        self.defs["head"] = PM.ParamDef((c_in + 1, cfg.n_classes), P(),
+                                        init="normal")
+        self.metas["head"] = LayerMeta(
+            name="head", param_path=("head",), d_in=c_in,
+            d_out=cfg.n_classes, kind="dense", has_bias=True)
+        self.contract_map = {}
+
+    # -- params ---------------------------------------------------------
+    def init_params(self, key):
+        params = PM.materialize(key, self.defs)
+        # materialize draws the full matrix; zero the homogeneous bias rows
+        return {k: v.at[-1].set(0.0) for k, v in params.items()}
+
+    def abstract_params(self, dtype=jnp.float32):
+        return PM.abstract(self.defs, dtype, self.mesh)
+
+    def n_params(self):
+        return PM.count(self.defs)
+
+    # -- forward --------------------------------------------------------
+    def logits(self, params, x, tg: Optional[Tagger] = None):
+        tg = tg or Tagger("plain")
+        h = x
+        side = self.cfg.image_size
+        for name, c_in, spatial, stride in self._stages:
+            b = h.shape[0]
+            s = conv(tg, name, params[name], h.reshape(b, side, side, c_in),
+                     spatial=spatial, stride=stride, padding="SAME")
+            side = conv_out_len(side, spatial[0], stride[0], "SAME")
+            h = self.nonlin(s)                      # (B, side², c_out)
+        h = jnp.mean(h, axis=1)                     # global average pool
+        hb = jnp.concatenate([h, jnp.ones((h.shape[0], 1), h.dtype)], -1)
+        z = hb @ params["head"]
+        return tg.tag("head", hb, z)
+
+    def loss(self, params, probes, batch, rng, mode: str = "plain"):
+        """((loss_true, loss_sampled), aux) — same contract as MLP/LM."""
+        tg = Tagger(mode, probes, self.contract_map)
+        z = self.logits(params, batch["x"], tg)
+        logp = jax.nn.log_softmax(z, axis=-1)
+        lt = -jnp.mean(jnp.take_along_axis(
+            logp, batch["y"][:, None], axis=-1))
+        ys = jax.random.categorical(rng, jax.lax.stop_gradient(z), axis=-1)
+        ls = -jnp.mean(jnp.take_along_axis(logp, ys[:, None], axis=-1))
+        acc = jnp.mean((jnp.argmax(z, -1) == batch["y"]).astype(jnp.float32))
+        return (lt, ls), {"recs": tg.out(),
+                          "metrics": {"loss": lt, "accuracy": acc}}
+
+    # -- probes ---------------------------------------------------------
+    def probe_shapes(self, batch):
+        def f(p, b):
+            (lt, ls), aux = self.loss(p, None, b, jax.random.PRNGKey(0),
+                                      mode="shapes")
+            return aux["recs"]
+        return jax.eval_shape(f, PM.abstract(self.defs), batch)
+
+    def make_probes(self, shapes):
+        return {k: jnp.zeros(v.shape, jnp.float32) for k, v in shapes.items()}

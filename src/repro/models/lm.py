@@ -28,6 +28,7 @@ from repro.configs.base import ModelConfig, KFACConfig
 from repro.core import factors as F
 from repro.core.tags import LayerMeta, Tagger, merge_records
 from repro.models import params as PM
+from repro.models.conv import conv, conv_meta
 from repro.models.head import head_logits, lm_head_loss
 from repro.models.layers import attention, apply_rope, dense, rms_norm
 from repro.models.moe import moe_ffn
@@ -212,6 +213,17 @@ class LM:
         if cfg.encoder_layers:
             defs["enc_blocks"] = self._enc_block_defs((cfg.encoder_layers,))
             defs["enc_final_ln"] = self._pd((d,), (None,), init="zeros")
+        if cfg.frontend == "audio":
+            # whisper Conv1D stem: mels -> d (k=3 s=1), d -> d (k=3 s=2);
+            # weights stored as tap-major patch matrices, bias = last row
+            defs["enc_conv1"] = self._pd((3 * cfg.n_mels + 1, d),
+                                         (None, self._fs(d)))
+            defs["enc_conv2"] = self._pd((3 * d + 1, d),
+                                         (None, self._fs(d)))
+        if cfg.frontend == "patch":
+            p, ic = cfg.patch_size, cfg.image_channels
+            defs["vis_patch"] = self._pd((p * p * ic + 1, d),
+                                         (None, self._fs(d)))
         return defs
 
     def _enc_block_defs(self, lead):
@@ -308,6 +320,22 @@ class LM:
             for w, key in (("gate", "wg"), ("up", "wu"), ("down", "wd")):
                 add(f"enc.mlp.{w}", ("enc_blocks", "mlp", key),
                     n_stack=cfg.encoder_layers)
+        # modality frontends: KFC conv blocks (Grosse & Martens 1602.01407)
+        if cfg.frontend == "audio":
+            metas["enc.conv1"] = conv_meta(
+                "enc.conv1", ("enc_conv1",), spatial=(3,), stride=(1,),
+                c_in=cfg.n_mels, d_out=cfg.d_model, padding="SAME",
+                max_factor_dim=self.kfac.max_factor_dim)
+            metas["enc.conv2"] = conv_meta(
+                "enc.conv2", ("enc_conv2",), spatial=(3,), stride=(2,),
+                c_in=cfg.d_model, d_out=cfg.d_model, padding="SAME",
+                max_factor_dim=self.kfac.max_factor_dim)
+        if cfg.frontend == "patch":
+            metas["vis.patch"] = conv_meta(
+                "vis.patch", ("vis_patch",), spatial=(cfg.patch_size,) * 2,
+                stride=(cfg.patch_size,) * 2, c_in=cfg.image_channels,
+                d_out=cfg.d_model, padding="VALID",
+                max_factor_dim=self.kfac.max_factor_dim)
         # embedding: diagonal A (token frequencies), full G on d_model
         metas["embed"] = LayerMeta(
             name="embed", param_path=("embed",), d_in=cfg.vocab_size,
@@ -333,7 +361,13 @@ class LM:
     # initialization / abstraction
     # ------------------------------------------------------------------
     def init_params(self, key, dtype=jnp.float32):
-        return PM.materialize(key, self.defs, dtype)
+        params = PM.materialize(key, self.defs, dtype)
+        # conv stems: zero the homogeneous bias rows (MLP/ConvNet convention;
+        # materialize draws the full matrix like a weight)
+        for name in ("enc_conv1", "enc_conv2", "vis_patch"):
+            if name in params:
+                params[name] = params[name].at[-1].set(0.0)
+        return params
 
     def abstract_params(self, dtype=jnp.float32):
         return PM.abstract(self.defs, dtype, self.mesh)
@@ -514,11 +548,21 @@ class LM:
     # ------------------------------------------------------------------
     # encoder (whisper)
     # ------------------------------------------------------------------
-    def _encoder(self, params, frames, tg_mode, probes):
+    def _encoder(self, params, mels, tg: Tagger, tg_mode, probes):
+        """Whisper encoder: Conv1D stem (k=3 s=1, then k=3 s=2, GELU after
+        each — both KFC-tagged on the OUTER tagger) + full-attention stack.
+        mels: (B, 2*encoder_seq, n_mels) raw log-mel frames."""
         cfg = self.cfg
-        x = frames.astype(self.cdtype)
+        x = conv(tg, "enc.conv1", params["enc_conv1"],
+                 mels.astype(self.cdtype), spatial=(3,), stride=(1,),
+                 padding="SAME")
+        x = jax.nn.gelu(x)
+        x = conv(tg, "enc.conv2", params["enc_conv2"], x, spatial=(3,),
+                 stride=(2,), padding="SAME")
+        x = jax.nn.gelu(x)
         x = x + sinusoid_posemb(x.shape[1], cfg.d_model).astype(x.dtype)[None]
-        pr = {k: v for k, v in (probes or {}).items() if k.startswith("enc.")}
+        pr = {k: v for k, v in (probes or {}).items()
+              if k.startswith("enc.") and ".conv" not in k}
 
         def body(h, xs):
             p, prs = xs
@@ -584,14 +628,20 @@ class LM:
         enc_out = None
         extra = {}
         if cfg.frontend == "patch":
-            patches = batch["patches"].astype(self.cdtype)   # (B, P, d)
-            x = jnp.concatenate([patches, x], axis=1)
-            pfx = jnp.zeros((bsz, patches.shape[1]), labels.dtype)
+            # Conv2D patchifier (KFC-tagged): raw images -> patch embeddings
+            p = conv(tg, "vis.patch", params["vis_patch"],
+                     batch["images"].astype(self.cdtype),
+                     spatial=(cfg.patch_size,) * 2,
+                     stride=(cfg.patch_size,) * 2, padding="VALID")
+            p = p + sinusoid_posemb(p.shape[1], cfg.d_model
+                                    ).astype(p.dtype)[None]
+            x = jnp.concatenate([p, x], axis=1)
+            pfx = jnp.zeros((bsz, p.shape[1]), labels.dtype)
             labels = jnp.concatenate([pfx, labels], axis=1)
             mask = jnp.concatenate([jnp.zeros_like(pfx, jnp.float32), mask],
                                    axis=1)
         elif cfg.frontend == "audio":
-            enc_out, enc_recs = self._encoder(params, batch["frames"],
+            enc_out, enc_recs = self._encoder(params, batch["mels"], tg,
                                               tg_mode, probes)
             extra.update(enc_recs)
             x = x + sinusoid_posemb(t, cfg.d_model).astype(x.dtype)[None]
@@ -715,7 +765,7 @@ class LM:
             params, {"tokens": batch["tokens"],
                      "labels": jnp.zeros_like(batch["tokens"]),
                      **{k: v for k, v in batch.items()
-                        if k in ("patches", "frames")}}, tg, None, "plain")
+                        if k in ("images", "mels")}}, tg, None, "plain")
 
         def body(h, bp):
             caches = {}

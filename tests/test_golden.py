@@ -22,8 +22,10 @@ import pytest
 
 from repro.configs.autoencoder import reduced
 from repro.configs.base import KFACConfig, TrainConfig
+from repro.configs.conv_classifier import reduced as conv_reduced
 from repro.core.kfac import KFAC
-from repro.data.pipeline import SyntheticAutoencoderData
+from repro.data.pipeline import SyntheticAutoencoderData, SyntheticImageData
+from repro.models.convnet import ConvNet
 from repro.models.mlp import MLP, autoencoder_dims
 from repro.training.trainer import Trainer
 
@@ -77,8 +79,71 @@ def test_golden_trajectory(inv_mode):
     assert all(b < a * 1.05 for a, b in zip(got, got[1:])), got
 
 
+# ---------------------------------------------------------------------------
+# conv classifier (KFC, 1602.01407): the same 50-step envelope over the
+# reduced ConvNet — pins the ConvKronecker composition (patch statistics,
+# homogeneous bias, eigen rescale) through the real Trainer, per inv_mode.
+# "tridiag" degrades to the block-diagonal inverse here (the chain
+# approximation needs an MLP-style layer_order), so it doubles as a pin
+# that the fallback stays exact.
+# ---------------------------------------------------------------------------
+
+# mode -> loss at each checkpoint step.  The descent is steep (the class
+# templates are memorized by ~step 25) and late losses sit at the noise
+# floor, so the band is wider than the autoencoder's and adds a small
+# absolute term: rel 15% + abs 0.02 per checkpoint.
+GOLDEN_CONV = {
+    "blkdiag": (1.3467, 0.9343, 0.0888, 0.0137, 0.0048, 0.0019),
+    "eigen":   (1.3467, 0.9342, 0.0887, 0.0137, 0.0048, 0.0019),
+    "tridiag": (1.3467, 0.9343, 0.0888, 0.0137, 0.0048, 0.0019),
+}
+REL_BAND_CONV = 0.15
+ABS_BAND_CONV = 0.02
+
+
+def conv_golden_run(inv_mode: str, steps: int = STEPS):
+    """Reduced conv classifier (two strided SAME convs + softmax head),
+    full-batch synthetic class-template images, eigh inverses, T3=5,
+    driven end-to-end by the real Trainer."""
+    cfg = conv_reduced()
+    net = ConvNet(cfg)
+    params = net.init_params(jax.random.PRNGKey(0))
+    data = SyntheticImageData(cfg.image_size, cfg.channels, cfg.n_classes,
+                              128, seed=7)
+    kcfg = KFACConfig(inv_mode=inv_mode, inverse_method="eigh",
+                      lambda_init=3.0, t3=5, eta=1e-5)
+    opt = KFAC(net, kcfg, family="categorical")
+    tr = Trainer(net, opt, TrainConfig(steps=steps, seed=0, log_every=10_000),
+                 None, None)
+    out = tr.fit(params, data, steps=steps, log=lambda *_: None)
+    return [h["loss"] for h in out["history"]]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("inv_mode", sorted(GOLDEN_CONV))
+def test_conv_golden_trajectory(inv_mode):
+    losses = conv_golden_run(inv_mode)
+    assert len(losses) == STEPS
+    assert np.isfinite(losses).all(), losses
+    want = GOLDEN_CONV[inv_mode]
+    got = [losses[i] for i in CHECKPOINTS]
+    for step, w, g in zip(CHECKPOINTS, want, got):
+        band = REL_BAND_CONV * w + ABS_BAND_CONV
+        assert abs(g - w) <= band, (
+            f"conv/{inv_mode}: step {step} loss {g:.4f} outside "
+            f"[{w - band:.4f}, {w + band:.4f}] (golden {w:.4f}) — "
+            f"regenerate GOLDEN_CONV only for an intentional change")
+    # sustained descent to well under the initial cross-entropy
+    assert losses[-1] < 0.2 * losses[0], (losses[0], losses[-1])
+    assert all(b < a + ABS_BAND_CONV for a, b in zip(got, got[1:])), got
+
+
 if __name__ == "__main__":
     for mode in sorted(GOLDEN):
         ls = golden_run(mode)
         pts = ", ".join(f"{ls[i]:.4f}" for i in CHECKPOINTS)
         print(f'    "{mode}": ({pts}),')
+    for mode in sorted(GOLDEN_CONV):
+        ls = conv_golden_run(mode)
+        pts = ", ".join(f"{ls[i]:.4f}" for i in CHECKPOINTS)
+        print(f'    conv "{mode}": ({pts}),')

@@ -66,6 +66,72 @@ def test_precondition():
                                rtol=2e-3, atol=2e-3)
 
 
+# ---------------------------------------------------------------------------
+# fused im2col patch-factor kernel (KFC, 1602.01407)
+# ---------------------------------------------------------------------------
+
+def _patch_factor_ref(x, old, meta, alpha, beta):
+    """Einsum oracle: explicit im2col + homogeneous coord + rank update."""
+    from repro.models.conv import append_homog, extract_patches
+    p = extract_patches(x, meta.conv_spatial, meta.conv_stride, meta.conv_pad)
+    p = p.reshape(-1, p.shape[-1])
+    if meta.has_bias:
+        p = append_homog(p)
+    return beta * old + alpha * p.T @ p
+
+
+@pytest.mark.parametrize("b,t,c,k,stride,pad,bias", [
+    (2, 128, 8, 3, 1, "SAME", True),      # whisper conv1 shape family
+    (2, 256, 16, 3, 2, "SAME", True),     # whisper conv2 (stride 2)
+    (1, 131, 8, 4, 1, "VALID", False),    # VALID with leftover rows
+    (2, 512, 128, 3, 1, "SAME", True),    # full 128-lane channel tile
+])
+def test_patch_factor_kernel(b, t, c, k, stride, pad, bias):
+    from repro.kernels.patch_factor import patch_factor_update
+    from repro.models.conv import conv_meta
+    meta = conv_meta("c", ("w",), spatial=(k,), stride=(stride,), c_in=c,
+                     d_out=4, padding=pad, bias=bias)
+    x = _rand(30, (b, t, c), jnp.float32)
+    old = _rand(31, (meta.a_dim, meta.a_dim), jnp.float32)
+    # traced alpha/beta through jit, like the optimizer's decayed blend
+    got = jax.jit(lambda a, be: patch_factor_update(x, old, meta, a, be))(
+        jnp.float32(0.03), jnp.float32(0.9))
+    assert got is not None, "kernel unexpectedly declined a tiled shape"
+    want = _patch_factor_ref(x, old, meta, 0.03, 0.9)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("c,t,k,pad", [
+    (13, 128, 3, "SAME"),     # ragged channels
+    (8, 21, 3, "SAME"),       # ragged output positions
+    (136, 128, 3, "SAME"),    # channels over the 128-lane tile
+    (8, 8, 9, "SAME"),        # taps exceed the time block (halo too short)
+    (8, 2, 3, "VALID"),       # t < k: zero output positions
+])
+def test_patch_factor_ragged_declines(c, t, k, pad):
+    """Shapes the kernel can't serve return None (never crash) — the block
+    then falls back to the einsum path (parity checked in test_blocks)."""
+    from repro.kernels.patch_factor import patch_factor_update
+    from repro.models.conv import conv_meta
+    meta = conv_meta("c", ("w",), spatial=(k,), stride=(1,), c_in=c,
+                     d_out=4, padding=pad)
+    x = _rand(32, (2, t, c), jnp.float32)
+    old = jnp.eye(meta.a_dim)
+    assert patch_factor_update(x, old, meta, 0.1, 0.9) is None
+
+
+def test_patch_factor_2d_declines():
+    """2-D convs decline the fused kernel (their im2col is a reshape; the
+    plain factor_update kernel covers them via the block route)."""
+    from repro.kernels.patch_factor import patch_factor_update
+    from repro.models.conv import conv_meta
+    meta = conv_meta("c", ("w",), spatial=(4, 4), stride=(4, 4), c_in=8,
+                     d_out=4, padding="VALID")
+    x = _rand(33, (2, 16, 16, 8), jnp.float32)
+    assert patch_factor_update(x.reshape(2, 256, 8), jnp.eye(meta.a_dim),
+                               meta, 0.1, 0.9) is None
+
+
 @pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
 @pytest.mark.parametrize("causal,window,cap", [(True, 0, 0.0),
                                                (True, 64, 0.0),

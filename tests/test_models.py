@@ -15,9 +15,11 @@ def _batch(cfg, key, b=2, t=16):
         "labels": jax.random.randint(ks[1], (b, t), 0, cfg.vocab_size),
     }
     if cfg.frontend == "patch":
-        batch["patches"] = jnp.zeros((b, cfg.frontend_tokens, cfg.d_model))
+        batch["images"] = jax.random.normal(
+            key, (b, cfg.image_size, cfg.image_size, cfg.image_channels))
     if cfg.frontend == "audio":
-        batch["frames"] = jnp.zeros((b, cfg.encoder_seq, cfg.d_model))
+        batch["mels"] = jax.random.normal(
+            key, (b, 2 * cfg.encoder_seq, cfg.n_mels))
     return batch
 
 

@@ -157,6 +157,90 @@ def test_eigen_matches_eigh_path_property(seed, da, dg, gamma):
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
+# ---------------------------------------------------------------------------
+# KFC convolution blocks (Grosse & Martens 1602.01407)
+# ---------------------------------------------------------------------------
+
+conv_channels = st.integers(min_value=1, max_value=5)
+conv_taps = st.integers(min_value=1, max_value=4)
+conv_strides = st.integers(min_value=1, max_value=3)
+conv_pads = st.sampled_from(["SAME", "VALID"])
+
+
+def _conv_block(c, k, s, pad, d_out=4, bias=True, cfg=None):
+    from repro.configs.base import KFACConfig
+    from repro.core import blocks as B
+    from repro.models.conv import conv_meta
+    meta = conv_meta("c", ("w",), spatial=(k,), stride=(s,), c_in=c,
+                     d_out=d_out, padding=pad, bias=bias)
+    return B.resolve(meta)(meta, cfg or KFACConfig())
+
+
+@given(seeds, conv_channels, conv_taps, conv_strides, conv_pads)
+def test_conv_a_factor_psd(seed, c, k, s, pad):
+    """The KFC A-factor (spatially-averaged patch second moment, with the
+    homogeneous bias coordinate) is symmetric PSD for any patch tensor."""
+    blk = _conv_block(c, k, s, pad)
+    t = k + 5                     # ensure at least one output position
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, t, c))
+    a = blk.stats_contrib({"cx": x},
+                          jnp.zeros((3, blk.meta.d_out)), {}, 3)["a"]
+    assert a.shape == (blk.meta.a_dim, blk.meta.a_dim)
+    np.testing.assert_allclose(a, a.T, rtol=1e-5, atol=1e-6)
+    w = np.linalg.eigvalsh(np.asarray(a))
+    assert w.min() > -1e-4 * max(1.0, w.max())
+
+
+@given(seeds, conv_channels, conv_taps, conv_strides, conv_pads)
+def test_patch_extraction_matches_lax(seed, c, k, s, pad):
+    """extract_patches (tap-major) equals jax.lax.conv_general_dilated_patches
+    (channel-major) up to the documented (k, c) transpose, and both equal a
+    per-window numpy gather."""
+    from repro.kernels.patch_factor import conv_pad_amounts
+    from repro.models.conv import conv_out_len, extract_patches
+    t = k + 6
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, t, c))
+    mine = extract_patches(x, (k,), (s,), pad)
+    theirs = jax.lax.conv_general_dilated_patches(
+        x, filter_shape=(k,), window_strides=(s,), padding=pad,
+        dimension_numbers=("NWC", "WIO", "NWC"))
+    t_out = conv_out_len(t, k, s, pad)
+    assert mine.shape == (2, t_out, k * c)
+    np.testing.assert_allclose(
+        mine.reshape(2, t_out, k, c),
+        jnp.swapaxes(theirs.reshape(2, t_out, c, k), -1, -2),
+        rtol=1e-6, atol=1e-7)
+    lo, hi = conv_pad_amounts(t, k, s, pad)
+    xp = np.pad(np.asarray(x), ((0, 0), (lo, hi), (0, 0)))
+    want = np.stack([xp[:, i * s:i * s + k, :].reshape(2, k * c)
+                     for i in range(t_out)], axis=1)
+    np.testing.assert_allclose(mine, want, rtol=1e-6, atol=1e-7)
+
+
+@given(seeds, st.integers(min_value=2, max_value=4), conv_taps,
+       st.floats(min_value=0.01, max_value=10.0))
+def test_conv_eigen_matches_eigh_after_refresh(seed, c, k, gamma):
+    """ConvKronecker inherits the EKFAC invariant: right after a refresh the
+    eigenbasis apply equals the eigh damped-inverse apply on factors built
+    from real patch statistics (bias row included)."""
+    from repro.configs.base import KFACConfig
+    blk = _conv_block(c, k, 1, "SAME", d_out=3,
+                      cfg=KFACConfig(inv_mode="eigen"))
+    m = blk.meta
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, k + 6, c))
+    cot = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                            (4, k + 6, m.d_out)) / 16.0
+    fac = blk.stats_contrib({"cx": x}, cot, {}, 8)
+    fac = {"a": fac["a"] + 0.05 * jnp.eye(m.a_dim),
+           "g": fac["g"] + 0.05 * jnp.eye(m.g_dim)}
+    inv = blk.damped_inverse(fac, gamma, method="eigh")
+    eig = blk.eigen_state(fac, gamma)
+    v = jax.random.normal(jax.random.PRNGKey(seed + 2), (m.a_dim, m.g_dim))
+    np.testing.assert_allclose(blk.precondition_eigen(eig, v),
+                               blk.precondition(inv, v),
+                               rtol=1e-4, atol=1e-4)
+
+
 @given(seeds, dims, dims, st.floats(min_value=0.0, max_value=1.0))
 def test_eigen_rescale_fixed_point(seed, da, dg, eps):
     """s is a fixed point of eigen_rescale exactly when the squared rotated
