@@ -6,7 +6,6 @@ superlinearly with m (gradient noise is its limiter), unlike SGD.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import KFACConfig
 from repro.core.kfac import KFAC

@@ -20,7 +20,7 @@ def run():
                              lambda_init=1.0, fixed_lr=1.0)
             opt = KFAC(mlp, cfg, family="bernoulli")
             rng = jax.random.PRNGKey(0)
-            state = dict(state0, gamma=jnp.float32(gamma))
+            state = state0.replace(gamma=jnp.float32(gamma))
             state, grads, metr = opt.stats_grads(state, params, batch, rng)
             state = opt.refresh_inverses(state)
             new_params, state, um = opt.apply_update(state, params, grads,

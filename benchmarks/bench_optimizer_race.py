@@ -1,16 +1,22 @@
-"""Paper Fig. 10/11 analogue: K-FAC variants vs tuned SGD+momentum on a deep
-autoencoder — per-iteration progress is the paper's headline claim."""
+"""Paper Fig. 10/11 analogue: K-FAC variants vs first-order baselines on a
+deep autoencoder — per-iteration progress is the paper's headline claim.
+
+Every optimizer here — K-FAC (all inv_modes), SGD+momentum, Adam — is an
+``repro.core.transform.Optimizer`` raced through the *identical*
+``Trainer.fit`` loop: no optimizer-specific branches anywhere in the race.
+The sgd/adam rows give the perf trajectory its first-order reference line
+(wall_s_per_step + final loss land in ``BENCH_optimizer.json``).
+"""
 from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs.base import KFACConfig
-from repro.core.kfac import KFAC
+from repro import optimizers
+from repro.configs.base import KFACConfig, TrainConfig
 from repro.data.pipeline import SyntheticAutoencoderData
 from repro.models.mlp import MLP
+
+import jax
 
 DIMS = [64, 48, 24, 12, 24, 48, 64]
 
@@ -19,35 +25,28 @@ def make_problem(n=1024, seed=7):
     mlp = MLP(DIMS, nonlin="tanh", loss="bernoulli")
     params = mlp.init_params(jax.random.PRNGKey(0), sparse=False)
     data = SyntheticAutoencoderData(DIMS[0], 8, n, seed=seed)
-    return mlp, params, data.batch(0)
+    return mlp, params, data
+
+
+def race(model, params, data, opt, steps):
+    """One optimizer through the shared trainer loop; returns
+    (per-step losses, wall seconds)."""
+    from repro.training.trainer import Trainer
+    tr = Trainer(model, opt, TrainConfig(steps=steps, seed=0,
+                                         log_every=10_000_000))
+    t0 = time.time()
+    out = tr.fit(params, data, steps=steps, log=lambda *_: None)
+    return [h["loss"] for h in out["history"]], time.time() - t0
 
 
 def run_kfac(steps=30, inv_mode="blkdiag", momentum=True, rescale=True,
              lambda_init=3.0):
-    mlp, params, batch = make_problem()
+    mlp, params, data = make_problem()
     cfg = KFACConfig(inv_mode=inv_mode, use_momentum=momentum,
                      use_rescale=rescale, lambda_init=lambda_init, t3=5,
                      fixed_lr=0.02, eta=1e-5)
-    opt = KFAC(mlp, cfg, family="bernoulli")
-    state = opt.init(params, batch)
-    stats = jax.jit(opt.stats_grads)
-    refresh = jax.jit(opt.refresh_inverses)
-    rescale = jax.jit(opt.rescale_step)
-    update = jax.jit(lambda s, p, g, b, r: opt.apply_update(s, p, g, b, r))
-    lam = jax.jit(opt.lambda_step)
-    losses, t0 = [], time.time()
-    for step in range(steps):
-        rng = jax.random.PRNGKey(1000 + step)
-        state, grads, metr = stats(state, params, batch, rng)
-        if step % cfg.t3 == 0 or step < 3:
-            state = refresh(state)
-        if inv_mode == "eigen":
-            state = rescale(state, grads)
-        params, state, _ = update(state, params, grads, batch, rng)
-        if (step + 1) % cfg.t1 == 0:
-            state, _ = lam(state, params, batch, rng)
-        losses.append(float(metr["loss"]))
-    return losses, time.time() - t0
+    opt = optimizers.kfac(mlp, cfg, family="bernoulli")
+    return race(mlp, params, data, opt, steps)
 
 
 def run_conv_kfac(steps=30, inv_mode="blkdiag"):
@@ -62,43 +61,21 @@ def run_conv_kfac(steps=30, inv_mode="blkdiag"):
     params = net.init_params(jax.random.PRNGKey(0))
     data = SyntheticImageData(cfg.image_size, cfg.channels, cfg.n_classes,
                               512, seed=7)
-    batch = data.batch(0)
     kcfg = KFACConfig(inv_mode=inv_mode, lambda_init=3.0, t3=5, eta=1e-5)
-    opt = KFAC(net, kcfg, family="categorical")
-    state = opt.init(params, batch)
-    stats = jax.jit(opt.stats_grads)
-    refresh = jax.jit(opt.refresh_inverses)
-    rescale = jax.jit(opt.rescale_step)
-    update = jax.jit(lambda s, p, g, b, r: opt.apply_update(s, p, g, b, r))
-    losses, t0 = [], time.time()
-    for step in range(steps):
-        rng = jax.random.PRNGKey(1000 + step)
-        state, grads, metr = stats(state, params, batch, rng)
-        if step % kcfg.t3 == 0 or step < 3:
-            state = refresh(state)
-        if inv_mode == "eigen":
-            state = rescale(state, grads)
-        params, state, _ = update(state, params, grads, batch, rng)
-        losses.append(float(metr["loss"]))
-    return losses, time.time() - t0
+    opt = optimizers.kfac(net, kcfg, family="categorical")
+    return race(net, params, data, opt, steps)
 
 
 def run_sgd(steps=30, lr=0.1, mom=0.9):
-    mlp, params, batch = make_problem()
+    mlp, params, data = make_problem()
+    opt = optimizers.sgd_momentum(mlp, lr=lr, momentum=mom)
+    return race(mlp, params, data, opt, steps)
 
-    def loss_fn(p):
-        (lt, _), _ = mlp.loss(p, None, batch, jax.random.PRNGKey(0), "plain")
-        return lt
 
-    gfn = jax.jit(jax.value_and_grad(loss_fn))
-    vel = jax.tree.map(jnp.zeros_like, params)
-    losses, t0 = [], time.time()
-    for _ in range(steps):
-        l, g = gfn(params)
-        vel = jax.tree.map(lambda v, gg: mom * v - lr * gg, vel, g)
-        params = jax.tree.map(lambda p, v: p + v, params, vel)
-        losses.append(float(l))
-    return losses, time.time() - t0
+def run_adam(steps=30, lr=1e-2):
+    mlp, params, data = make_problem()
+    opt = optimizers.adam(mlp, lr=lr)
+    return race(mlp, params, data, opt, steps)
 
 
 def run(steps=30):
@@ -106,6 +83,12 @@ def run(steps=30):
     for lr in (0.03, 0.1, 0.3):           # "tuned" = best of a small grid
         losses, secs = run_sgd(steps, lr=lr)
         rows.append((f"sgd_momentum_lr{lr}", secs / steps * 1e6, losses[-1]))
+    # the swappable first-order baselines at their default settings — the
+    # BENCH_optimizer.json reference line for the K-FAC rows below
+    losses, secs = run_sgd(steps)
+    rows.append(("sgd_momentum", secs / steps * 1e6, losses[-1]))
+    losses, secs = run_adam(steps)
+    rows.append(("adam", secs / steps * 1e6, losses[-1]))
     kf, secs = run_kfac(steps, "blkdiag")
     rows.append(("kfac_blkdiag", secs / steps * 1e6, kf[-1]))
     kf, secs = run_kfac(steps, "tridiag")

@@ -13,10 +13,15 @@ uploaded as a CI artifact.  Each file is::
       "rows": [
         {"name": "<row name>",              # e.g. "rotate_rescale_512_pallas"
          "us_per_call": <float>,            # mean wall-clock per call, µs
-         "derived": <float>},               # row-specific: GFLOP/s for
-        ...                                 # kernel rows, final loss for
+         "derived": <float>,                # row-specific: GFLOP/s for
+         ...},                              # kernel rows, final loss for
       ]                                     # optimizer-race rows
     }
+
+Suites may add per-row fields via ``emit_json``'s ``extras`` hook; the
+optimizer-race suite adds ``wall_s_per_step`` (seconds, = us_per_call/1e6)
+and ``final_loss`` (= derived) so the K-FAC rows carry an explicit
+first-order reference line (``sgd_momentum`` / ``adam`` rows).
 
 Row names are stable identifiers: kernel rows are
 ``<entry_point>_<dim>[_<kernel_backend>]``; optimizer rows are
@@ -38,12 +43,17 @@ from repro.models.mlp import MLP
 DIMS = [64, 48, 24, 12, 24, 48, 64]
 
 
-def emit_json(path, suite: str, rows) -> None:
-    """Write one suite's rows as the BENCH_*.json documented above."""
+def emit_json(path, suite: str, rows, extras=None) -> None:
+    """Write one suite's rows as the BENCH_*.json documented above.
+
+    ``extras``: optional ``(name, us, derived) -> dict`` adding suite-
+    specific per-row fields (see the schema note in the module docstring).
+    """
     payload = {
         "suite": suite,
         "backend": jax.default_backend(),
-        "rows": [{"name": n, "us_per_call": float(us), "derived": float(dv)}
+        "rows": [{"name": n, "us_per_call": float(us), "derived": float(dv),
+                  **(extras(n, us, dv) if extras else {})}
                  for n, us, dv in rows],
     }
     with open(path, "w") as f:

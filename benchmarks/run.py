@@ -18,6 +18,12 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _JSON_SUITES = {"kernels": "BENCH_kernels.json",
                 "optimizer_race": "BENCH_optimizer.json"}
 
+# per-suite extra row fields (see benchlib docstring for the schema)
+_JSON_EXTRAS = {
+    "optimizer_race": lambda n, us, dv: {"wall_s_per_step": us * 1e-6,
+                                         "final_loss": dv},
+}
+
 
 def main() -> None:
     suites = []
@@ -41,7 +47,7 @@ def main() -> None:
                 print(f"{row[0]},{row[1]:.0f},{row[2]:.4f}", flush=True)
             if name in _JSON_SUITES:
                 benchlib.emit_json(os.path.join(_ROOT, _JSON_SUITES[name]),
-                                   name, rows)
+                                   name, rows, extras=_JSON_EXTRAS.get(name))
         except Exception:  # noqa: BLE001
             print(f"{name},0,ERROR")
             traceback.print_exc()

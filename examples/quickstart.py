@@ -1,11 +1,19 @@
-"""Quickstart: K-FAC on a small MLP in ~40 lines.
+"""Quickstart: K-FAC on a small MLP in ~30 lines.
+
+The optimizer is a functional ``Optimizer(init, update)`` pipeline
+(optax-style): ``update`` runs the paper's full Algorithm 2 schedule —
+stats+grads every step, amortized inverse refreshes every T3 steps, the
+gamma sweep every T2, the LM lambda rule every T1 — off the step counter
+in the typed ``KFACState``.  Swap ``optimizers.kfac`` for
+``optimizers.sgd_momentum`` / ``optimizers.adam`` and nothing else
+changes; see docs/optimizer_api.md for the stage map.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
+from repro import optimizers
 from repro.configs.base import KFACConfig
-from repro.core.kfac import KFAC
 from repro.data.pipeline import SyntheticAutoencoderData
 from repro.models.mlp import MLP
 
@@ -16,24 +24,15 @@ params = mlp.init_params(jax.random.PRNGKey(0), sparse=False)
 # 2. data + the optimizer (paper hyper-parameters in KFACConfig)
 data = SyntheticAutoencoderData(32, 6, 512)
 batch = data.batch(0)
-cfg = KFACConfig(lambda_init=1.0, t3=5)
-opt = KFAC(mlp, cfg, family="bernoulli")
+opt = optimizers.kfac(mlp, KFACConfig(lambda_init=1.0, t3=5),
+                      family="bernoulli")
 state = opt.init(params, batch)
 
-# 3. jit the schedule pieces (Algorithm 2)
-stats = jax.jit(opt.stats_grads)
-refresh = jax.jit(opt.refresh_inverses)
-update = jax.jit(lambda s, p, g, b, r: opt.apply_update(s, p, g, b, r))
-lam = jax.jit(opt.lambda_step)
-
+# 3. one call per step — the pipeline schedules the amortized stages
 for step in range(20):
     rng = jax.random.fold_in(jax.random.PRNGKey(1), step)
-    state, grads, metrics = stats(state, params, batch, rng)   # 1 fwd, 2 bwd
-    if step % cfg.t3 == 0 or step < 3:                         # amortized d^3
-        state = refresh(state)
-    params, state, um = update(state, params, grads, batch, rng)
-    if (step + 1) % cfg.t1 == 0:                               # LM rule
-        state, _ = lam(state, params, batch, rng)
+    params, state, metrics = opt.update(None, state, params, batch, rng)
     print(f"step {step:2d}  loss={float(metrics['loss']):.4f}  "
-          f"alpha={float(um['alpha']):.2e}  mu={float(um['mu']):.2e}  "
-          f"lambda={float(state['lam']):.3f}")
+          f"alpha={float(metrics['alpha']):.2e}  "
+          f"mu={float(metrics['mu']):.2e}  "
+          f"lambda={float(state.lam):.3f}")

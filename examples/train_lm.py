@@ -13,9 +13,9 @@ import argparse
 
 import jax
 
+from repro import optimizers
 from repro.configs import get_reduced_config
 from repro.configs.base import KFACConfig, TrainConfig
-from repro.core.kfac import KFAC
 from repro.data.pipeline import SyntheticLMData
 from repro.models.lm import LM
 from repro.training.checkpoint import Checkpointer
@@ -40,7 +40,7 @@ def main():
     data = SyntheticLMData(cfg.vocab_size, args.seq, args.batch, noise=0.05)
     kcfg = KFACConfig(lambda_init=10.0, t3=5, t1=5, t2=1000)
     tcfg = TrainConfig(steps=args.steps, checkpoint_every=10, log_every=5)
-    trainer = Trainer(lm, KFAC(lm, kcfg), tcfg, None,
+    trainer = Trainer(lm, optimizers.kfac(lm, kcfg), tcfg, None,
                       Checkpointer(args.ckpt))
     out = trainer.fit(params, data, args.steps)
     h = out["history"]

@@ -23,8 +23,6 @@ decayed blend); state initialization and per-layer dispatch live in the
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
-
 import jax
 import jax.numpy as jnp
 

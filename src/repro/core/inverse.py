@@ -27,7 +27,7 @@ TP blocks) — inverses of stacked factors are one batched kernel.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,475 +1,22 @@
-"""K-FAC optimizer (paper Algorithm 2), as composable jit-able pieces.
+"""Deprecated import path — the K-FAC implementation moved.
 
-The trainer composes four entry points per the paper's schedule:
+``KFAC`` is now :class:`repro.optimizers.kfac.KFACEngine`: the same stage
+methods (``stats_grads`` / ``refresh_inverses`` / ``rescale_step`` /
+``apply_update`` / ``lambda_step``), operating on the typed
+:class:`repro.core.transform.KFACState` instead of a raw dict (dict-style
+reads like ``state["lam"]`` still work).  Hand-driving the stages remains
+supported, but the one-call pipeline is the front door now::
 
-  ``stats_grads``       every step: one forward, two backwards (true-label
-                        gradients + model-sampled g statistics), running
-                        factor update (S5).
-  ``refresh_inverses``  every T3 steps (and k<=3): damped structured
-                        inverses (S4.2/S6.3).  ``refresh_multi`` computes a
-                        stacked set for the gamma candidates (S6.6).
-  ``apply_update``      every step: preconditioning, exact-F re-scaling and
-                        momentum (S6.4/S7), candidate selection by M(δ).
-  ``lambda_step``       every T1 steps: reduction ratio rho + LM rule (S6.5).
-  ``rescale_step``      eigen mode only, every step: EKFAC second-moment
-                        diagonal update in the amortized eigenbases
-                        (George et al. 1806.03884); no-op otherwise.
+    from repro import optimizers
+    opt = optimizers.kfac(model, cfg)                 # Optimizer(init, update)
+    state = opt.init(params, batch)
+    params, state, metrics = opt.update(None, state, params, batch, rng)
 
-With ``KFACConfig.inv_mode == "eigen"``, ``refresh_inverses`` computes factor
-*eigenbases* instead of damped inverses, and preconditioning rotates into
-that basis, rescales by the per-step diagonal, and rotates back.
-
-Module map: every per-layer behavior (factor layout, statistics, damped
-inverses, preconditioner apply) lives in a ``CurvatureBlock`` from
-``core/blocks`` — this file only iterates blocks polymorphically, so the
-stats/inverse/precondition paths contain no per-kind branching.  The shared
-numerics the blocks call sit in ``core/factors.py`` (S3/S5 contractions),
-``core/inverse.py`` (S4.2/S6.3 damped inverses), ``core/tridiag.py``
-(S4.3/App B chain math), with ``core/fisher.py`` (S6.4/App C exact-F
-products) and ``core/damping.py`` (S6.5/S6.6) on the update side.  With
-``KFACConfig.kernel_backend == "pallas"``, dense blocks route their factor
-accumulation and two-sided apply through the Pallas kernels in
-``repro.kernels``.
-
-Keeping these separate (no lax.cond megakernel) keeps the per-step HLO —
-and hence the roofline accounting — honest.
+``KFAC(model, cfg)`` instances passed to ``Trainer`` are wrapped into that
+pipeline automatically.  See ``docs/optimizer_api.md`` for the stage map.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, List, Optional
+from repro.optimizers.kfac import KFACEngine as KFAC
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs.base import KFACConfig
-from repro.core import damping as D
-from repro.core import factors as F
-from repro.core import fisher as FI
-from repro.core.blocks import TridiagChain, build_blocks
-from repro.utils import tree as T
-
-
-def _path_tuple(keypath) -> tuple:
-    out = []
-    for k in keypath:
-        if hasattr(k, "key"):
-            out.append(k.key)
-        elif hasattr(k, "idx"):
-            out.append(k.idx)
-        else:
-            out.append(str(k))
-    return tuple(out)
-
-
-class KFAC:
-    """model must provide: metas, loss(params, probes, batch, rng, mode),
-    probe_shapes(batch), plus `hidden`/`head_weight` (LM) or `logits` (MLP)."""
-
-    def __init__(self, model, cfg: KFACConfig, mesh=None,
-                 family: str = "categorical"):
-        if cfg.kernel_backend not in ("xla", "pallas"):
-            raise ValueError(f"unknown kernel_backend {cfg.kernel_backend!r}"
-                             " (expected 'xla' or 'pallas')")
-        if cfg.inv_mode not in ("blkdiag", "tridiag", "eigen"):
-            raise ValueError(f"unknown inv_mode {cfg.inv_mode!r}"
-                             " (expected 'blkdiag', 'tridiag' or 'eigen')")
-        self.model = model
-        self.cfg = cfg
-        self.mesh = mesh
-        self.family = family
-        self.metas = model.metas
-        self.is_lm = hasattr(model, "hidden")
-        self.tagged = {m.param_path for m in self.metas.values()}
-        self.tridiag = (cfg.inv_mode == "tridiag"
-                        and hasattr(model, "layer_order"))
-        self.eigen = cfg.inv_mode == "eigen"
-        self.blocks = build_blocks(self.metas, cfg)
-        self.chain = TridiagChain(model, cfg) if self.tridiag else None
-        self._probe_shapes = None
-
-    # ------------------------------------------------------------------
-    def n_tokens(self, batch) -> int:
-        if not self.is_lm:
-            return int(batch["x"].shape[0])
-        b, t = batch["tokens"].shape
-        if self.model.cfg.frontend == "patch":
-            t += self.model.cfg.frontend_tokens
-        return int(b * t)
-
-    def _probes(self, batch):
-        if self._probe_shapes is None:
-            self._probe_shapes = self.model.probe_shapes(
-                jax.eval_shape(lambda b: b, batch))
-        return self.model.make_probes(self._probe_shapes)
-
-    def _is_tagged(self, keypath) -> bool:
-        return _path_tuple(keypath) in self.tagged
-
-    # ------------------------------------------------------------------
-    # init
-    # ------------------------------------------------------------------
-    def init(self, params, batch) -> Dict[str, Any]:
-        factors = {name: blk.init_factors()
-                   for name, blk in self.blocks.items()}
-        if self.chain is not None:
-            factors[TridiagChain.CROSS] = self.chain.init_factors()
-        diag = jax.tree_util.tree_map_with_path(
-            lambda kp, x: (jnp.zeros((0,), jnp.float32) if self._is_tagged(kp)
-                           else jnp.zeros_like(x, jnp.float32)), params)
-        inv = self._identity_inverses()
-        state = {
-            "step": jnp.int32(0),
-            "k_stats": jnp.int32(0),
-            "lam": jnp.float32(self.cfg.lambda_init),
-            "gamma": jnp.float32(math.sqrt(self.cfg.lambda_init + self.cfg.eta)),
-            "factors": factors,
-            "inv": inv,
-            "diag": diag,
-            "delta0": T.tree_zeros_like(
-                T.tree_cast(params, jnp.float32)),
-            "m_delta": jnp.float32(-1.0),
-            "loss_prev": jnp.float32(0.0),
-        }
-        return state
-
-    def _identity_inverses(self):
-        if self.eigen:
-            return {name: blk.eigen_identity()
-                    for name, blk in self.blocks.items()}
-        out = {name: blk.identity_inverse()
-               for name, blk in self.blocks.items()}
-        if self.chain is not None:
-            out[TridiagChain.TRI] = self.chain.identity_inverse()
-        return out
-
-    def state_shardings(self, state_abs, param_shardings, mesh):
-        """NamedSharding tree for the optimizer state (dry-run / pjit).
-
-        Factor/inverse storage is FSDP-spread over `data` and stack/expert/
-        block dims over `model` (see CurvatureBlock.factor_specs); diag & momentum
-        follow the parameter shardings; scalars replicate."""
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        rep = NamedSharding(mesh, P())
-        fs = {name: blk.factor_specs(mesh) for name, blk in self.blocks.items()}
-        fac_sh = {name: {"a": NamedSharding(mesh, fs[name]["a"]),
-                         "g": NamedSharding(mesh, fs[name]["g"])}
-                  for name in self.metas}
-        if self.eigen:
-            # eigenbases shard like their factors; the eigenbasis diagonals
-            # like the weight (None entries pair with the identity bases)
-            inv_sh = {
-                name: {k: (None if spec is None else NamedSharding(mesh, spec))
-                       for k, spec in blk.eigen_specs(mesh).items()}
-                for name, blk in self.blocks.items()}
-        else:
-            inv_sh = {name: {"a_inv": fac_sh[name]["a"],
-                             "g_inv": fac_sh[name]["g"]}
-                      for name in self.metas}
-        if self.chain is not None:
-            cross, tri = TridiagChain.CROSS, TridiagChain.TRI
-            fac_sh[cross] = jax.tree.map(lambda _: rep,
-                                         state_abs["factors"][cross])
-            inv_sh[tri] = jax.tree.map(lambda _: rep,
-                                       state_abs["inv"][tri])
-        diag_sh = jax.tree.map(
-            lambda leaf, sh: rep if leaf.size == 0 else sh,
-            state_abs["diag"], param_shardings)
-        return {
-            "step": rep, "k_stats": rep, "lam": rep, "gamma": rep,
-            "factors": fac_sh, "inv": inv_sh, "diag": diag_sh,
-            "delta0": param_shardings,
-            "m_delta": rep, "loss_prev": rep,
-        }
-
-    # ------------------------------------------------------------------
-    # stats + grads (paper tasks 1–4): a full-batch gradient pass, plus a
-    # tau1-subsampled model-sampled-target pass for the factor statistics.
-    # The stats pass differentiates only w.r.t. the probes, so its backward
-    # is the cheap activation-only chain (no dW products — task 3's C1 cost).
-    # ------------------------------------------------------------------
-    def _sub_batch(self, batch):
-        stride = max(1, round(1.0 / self.cfg.tau1))
-        if stride == 1:
-            return batch
-        # strided slice stays aligned with the batch sharding
-        return jax.tree.map(lambda x: x[::stride], batch)
-
-    def _constrain_grads(self, grads):
-        """Pin gradients to the parameter storage layout so partial-sum
-        reductions lower as reduce-scatters into the FSDP shards rather than
-        full all-reduces."""
-        if self.mesh is None or not hasattr(self.model, "param_shardings"):
-            return grads
-        return jax.lax.with_sharding_constraint(
-            grads, self.model.param_shardings())
-
-    def stats_grads(self, state, params, batch, rng):
-        # ---- pass 1: gradients on the full batch (plain mode) ----
-        def f1(p):
-            (lt, _), aux = self.model.loss(p, None, batch, rng, mode="plain")
-            return lt, aux["metrics"]
-
-        (lt, metrics1), grads = jax.value_and_grad(f1, has_aux=True)(params)
-        grads = self._constrain_grads(grads)
-
-        # ---- pass 2: tau1-subsampled statistics with sampled targets ----
-        sub = self._sub_batch(batch)
-        probes = self._probes(sub)
-        n = self.n_tokens(sub)
-        rng2 = jax.random.fold_in(rng, 1)
-
-        def f2(pr):
-            (_, ls), aux = self.model.loss(params, pr, sub, rng2,
-                                           mode="collect")
-            return ls, aux
-
-        ls, vjp_fn, aux = jax.vjp(f2, probes, has_aux=True)
-        (gprobes,) = vjp_fn(jnp.float32(1.0))
-        recs = aux["recs"]
-
-        # each block folds its own contribution into the decayed running
-        # factors (dense blocks may fuse this through the Pallas kernel)
-        k = state["k_stats"] + 1
-        eps = F.decay_eps(k, self.cfg.decay_cap)
-        factors = {
-            name: blk.update_factors(state["factors"][name], recs.get(name),
-                                     gprobes.get(name), sub, n, eps)
-            for name, blk in self.blocks.items()}
-        if self.chain is not None:
-            cross = TridiagChain.CROSS
-            factors[cross] = self.chain.update_factors(
-                state["factors"][cross], recs, gprobes, sub, n, eps)
-
-        # diagonal running curvature for untagged (elementwise) params —
-        # squared gradients (these cover <1% of parameters; the tagged
-        # weights use the proper Kronecker blocks)
-        diag_new = jax.tree_util.tree_map_with_path(
-            lambda kp, g, old: (old if self._is_tagged(kp)
-                                else eps * old
-                                + (1 - eps) * jnp.square(g.astype(jnp.float32))),
-            grads, state["diag"])
-
-        state = dict(state, factors=factors, diag=diag_new, k_stats=k,
-                     loss_prev=lt)
-        metrics = dict(metrics1, loss_sampled=ls)
-        return state, grads, metrics
-
-    # ------------------------------------------------------------------
-    # inverses
-    # ------------------------------------------------------------------
-    def _inverses_for(self, factors, gamma, prev=None):
-        cfg = self.cfg
-        if self.eigen:
-            return {name: blk.eigen_state(factors[name], gamma)
-                    for name, blk in self.blocks.items()}
-        out = {}
-        for name, blk in self.blocks.items():
-            out[name] = blk.damped_inverse(
-                factors[name], gamma,
-                method=cfg.inverse_method, iters=cfg.ns_iters,
-                prev=None if prev is None else prev.get(name))
-        if self.chain is not None:
-            out[TridiagChain.TRI] = self.chain.damped_inverse(factors, gamma)
-        return out
-
-    def refresh_inverses(self, state, hot: bool = False):
-        prev = state["inv"] if (hot and self.cfg.inverse_method == "ns") else None
-        inv = self._inverses_for(state["factors"], state["gamma"], prev)
-        return dict(state, inv=inv)
-
-    def refresh_subset(self, state, names, hot: bool = True):
-        """Staggered refresh (beyond-paper, DESIGN §3): recompute only the
-        named layer blocks — the trainer round-robins so 1/T3 of the d³ work
-        lands on each step instead of spiking every T3 steps."""
-        cfg = self.cfg
-        inv = dict(state["inv"])
-        if self.eigen:
-            for name in names:
-                inv[name] = self.blocks[name].eigen_state(
-                    state["factors"][name], state["gamma"])
-            return dict(state, inv=inv)
-        prev = state["inv"] if cfg.inverse_method == "ns" and hot else None
-        for name in names:
-            inv[name] = self.blocks[name].damped_inverse(
-                state["factors"][name], state["gamma"],
-                method=cfg.inverse_method,
-                iters=cfg.ns_hot_iters if hot else cfg.ns_iters,
-                prev=None if prev is None else prev.get(name))
-        return dict(state, inv=inv)
-
-    def rescale_step(self, state, grads):
-        """Eigen mode, every step: re-estimate each block's eigenbasis
-        second-moment diagonal from the current gradient (EKFAC's cheap
-        half — the bases stay on the amortized T3 schedule).  No-op in the
-        other inv_modes."""
-        if not self.eigen:
-            return state
-        eps = jnp.float32(self.cfg.eigen_decay)
-        inv = dict(state["inv"])
-        for name, blk in self.blocks.items():
-            v = T.get_path(grads, blk.meta.param_path)
-            inv[name] = blk.rescale_step(inv[name], v, eps)
-        return dict(state, inv=inv)
-
-    def stagger_groups(self):
-        """Partition layer names into T3 round-robin refresh groups."""
-        names = [n for n in self.metas]
-        t3 = max(1, self.cfg.t3)
-        return [names[i::t3] for i in range(t3)]
-
-    def grads_only(self, state, params, batch, rng):
-        """Gradient pass without the statistics pass (straggler/budget mode
-        via KFACConfig.stats_period)."""
-        def f1(p):
-            (lt, _), aux = self.model.loss(p, None, batch, rng, mode="plain")
-            return lt, aux["metrics"]
-
-        (lt, metrics), grads = jax.value_and_grad(f1, has_aux=True)(params)
-        return dict(state, loss_prev=lt), grads, metrics
-
-    def refresh_multi(self, state):
-        """Stacked inverses for the 3 gamma candidates (S6.6), via vmap.
-
-        Eigen mode shares one eigendecomposition across the candidates —
-        the bases are gamma-independent; only the damp diagonal varies."""
-        gammas = D.gamma_candidates(state["gamma"], self._omega2())
-        if self.eigen:
-            inv3 = {name: blk.eigen_state_multi(state["factors"][name],
-                                                gammas)
-                    for name, blk in self.blocks.items()}
-            return gammas, inv3
-        inv3 = jax.vmap(lambda g: self._inverses_for(state["factors"], g))(
-            gammas)
-        return gammas, inv3
-
-    def _omega1(self):
-        return float(self.cfg.omega1_base ** self.cfg.t1)
-
-    def _omega2(self):
-        return float(math.sqrt(self.cfg.omega2_base) ** self.cfg.t2)
-
-    # ------------------------------------------------------------------
-    # preconditioning
-    # ------------------------------------------------------------------
-    def _precondition(self, grads_reg, inv, state):
-        lam_eta = state["lam"] + self.cfg.eta
-        # untagged params: diagonal curvature
-        out = jax.tree_util.tree_map_with_path(
-            lambda kp, g, d: (g if self._is_tagged(kp)
-                              else g / (d + lam_eta)),
-            grads_reg, state["diag"])
-        if self.chain is not None:
-            vs = {name: T.get_path(grads_reg, self.metas[name].param_path)
-                  for name in self.model.layer_order}
-            us = self.chain.precondition(inv[TridiagChain.TRI], vs)
-            for name, u in us.items():
-                out = T.set_path(out, self.metas[name].param_path, u)
-        else:
-            for name, blk in self.blocks.items():
-                v = T.get_path(grads_reg, blk.meta.param_path)
-                u = (blk.precondition_eigen(inv[name], v) if self.eigen
-                     else blk.precondition(inv[name], v))
-                out = T.set_path(out, blk.meta.param_path, u)
-        return T.tree_scale(out, -1.0)
-
-    # ------------------------------------------------------------------
-    # update: rescale + momentum + candidate select
-    # ------------------------------------------------------------------
-    def apply_update(self, state, params, grads, batch, rng, *,
-                     cand_inv: Optional[List] = None, gammas=None,
-                     loss_now=None):
-        """cand_inv: list of inverse pytrees (candidates); default state['inv'].
-        Returns (params', state', metrics)."""
-        cfg = self.cfg
-        invs = cand_inv if cand_inv is not None else [state["inv"]]
-        nc = len(invs)
-        grads_reg = T.tree_axpy(cfg.eta, T.tree_cast(params, jnp.float32),
-                                T.tree_cast(grads, jnp.float32))
-
-        deltas = [self._precondition(grads_reg, inv, state) for inv in invs]
-        use_mom = cfg.use_momentum
-        tangents = deltas + ([state["delta0"]] if use_mom else [])
-        m = len(tangents)
-
-        lam_eta = state["lam"] + cfg.eta
-        if cfg.use_rescale:
-            if self.is_lm:
-                q = FI.quad_lm(self.model, params, batch, tangents)
-            else:
-                q = FI.quad_logits(
-                    lambda p: self.model.logits(p, batch["x"]),
-                    params, batch, tangents, self.family)
-            dots = jnp.array([[T.tree_dot(tangents[i], tangents[j])
-                               for j in range(m)] for i in range(m)])
-            q = q + lam_eta * dots
-            b = jnp.array([T.tree_dot(grads_reg, t) for t in tangents])
-
-            alphas, mus, ms = [], [], []
-            for c in range(nc):
-                if use_mom:
-                    idx = jnp.array([c, m - 1])
-                    q2 = q[jnp.ix_(idx, idx)] + 1e-20 * jnp.eye(2)
-                    b2 = b[idx]
-                    x = -jnp.linalg.solve(q2, b2)
-                    mval = 0.5 * x @ q2 @ x + b2 @ x
-                    alphas.append(x[0]); mus.append(x[1]); ms.append(mval)
-                else:
-                    a = -b[c] / jnp.maximum(q[c, c], 1e-20)
-                    alphas.append(a); mus.append(jnp.float32(0.0))
-                    ms.append(0.5 * a * a * q[c, c] + a * b[c])
-            alphas = jnp.stack(alphas); mus = jnp.stack(mus)
-            ms = jnp.stack(ms)
-            c_star = jnp.argmin(ms)
-            alpha = alphas[c_star]
-            mu = mus[c_star]
-            m_delta = ms[c_star]
-        else:
-            alpha = jnp.float32(cfg.fixed_lr)
-            mu = jnp.float32(0.0)
-            c_star = jnp.int32(0)
-            m_delta = jnp.float32(-1.0)
-
-        # select the winning candidate's delta (and inverses / gamma)
-        if nc == 1:
-            delta_sel = deltas[0]
-            inv_sel = invs[0]
-            gamma_new = state["gamma"]
-        else:
-            onehot = jax.nn.one_hot(c_star, nc)
-            delta_sel = deltas[0]
-            for c in range(1, nc):
-                delta_sel = jax.tree.map(
-                    lambda a, bb, w=onehot[c], w0=(onehot[0] if c == 1 else 1.0):
-                    (a * w0 if c == 1 else a) + bb * w, delta_sel, deltas[c])
-            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *invs)
-            inv_sel = jax.tree.map(lambda x: jnp.take(x, c_star, axis=0),
-                                   stacked)
-            gamma_new = gammas[c_star]
-
-        delta = T.tree_scale(delta_sel, alpha)
-        if use_mom:
-            delta = T.tree_axpy(mu, state["delta0"], delta)
-        new_params = jax.tree.map(
-            lambda p, d: (p + d.astype(p.dtype)), params, delta)
-
-        state = dict(state, step=state["step"] + 1, delta0=delta,
-                     m_delta=m_delta, inv=inv_sel, gamma=gamma_new)
-        metrics = {
-            "alpha": alpha, "mu": mu, "m_delta": m_delta,
-            "gamma": gamma_new, "lam": state["lam"],
-            "grad_norm": jnp.sqrt(T.tree_sqnorm(grads_reg)),
-            "delta_norm": jnp.sqrt(T.tree_sqnorm(delta)),
-        }
-        return new_params, state, metrics
-
-    # ------------------------------------------------------------------
-    # lambda adaptation (S6.5)
-    # ------------------------------------------------------------------
-    def lambda_step(self, state, new_params, batch, rng):
-        (l_new, _), _ = self.model.loss(new_params, None, batch, rng,
-                                        mode="plain")
-        rho = (l_new - state["loss_prev"]) / jnp.minimum(
-            state["m_delta"], -1e-20)
-        lam = D.lambda_update(state["lam"], rho, self._omega1())
-        return dict(state, lam=lam), rho
+__all__ = ["KFAC"]

@@ -1,0 +1,307 @@
+"""Functional optimizer API: optax-style gradient-transformation pipeline.
+
+The paper frames K-FAC as "the plain stochastic gradient plus a
+preconditioner"; this module supplies the frame itself.  Two protocols:
+
+``Transform(init, update)``
+    A *pure* gradient transformation, exactly optax's contract::
+
+        state            = tx.init(params)
+        updates, state   = tx.update(updates, state, params)
+
+    Transforms compose with :func:`chain`.  The generic building blocks
+    (:func:`scale`, :func:`with_momentum`, :func:`scale_by_adam`,
+    :func:`add_decayed_weights`, :func:`clip_by_global_norm`) are enough to
+    express the paper's own baselines — SGD with momentum and Adam — in the
+    same API the K-FAC pipeline speaks.
+
+``Optimizer(init, update, reject, ...)``
+    The full trainer-facing object::
+
+        state = opt.init(params, batch)
+        new_params, state, metrics = opt.update(grads, state, params,
+                                                batch, rng)
+
+    ``grads`` may be ``None``, in which case the optimizer runs its own
+    gradient pass (K-FAC *must* be driven this way: its gradient and
+    statistics passes share one forward, see
+    :mod:`repro.optimizers.kfac`).  ``reject(state)`` is the non-finite
+    -update hook the trainer calls instead of applying a poisoned step
+    (K-FAC raises damping and clears momentum; first-order methods are a
+    no-op).  ``Trainer.fit`` calls nothing but ``init`` / ``update`` /
+    ``reject`` plus the checkpoint hooks — it contains no
+    optimizer-specific branches.
+
+The optimizer *state* is typed: :class:`KFACState` (the K-FAC pipeline) and
+:class:`TransformState` (first-order baselines) are frozen dataclasses
+registered with :func:`jax.tree_util.register_dataclass`, so they jit,
+shard (``Optimizer.state_shardings``), ``eval_shape`` and checkpoint as
+ordinary pytrees — no string-key plumbing.  Field names deliberately match
+the historical dict keys so pre-dataclass checkpoints restore unchanged
+(see ``training/checkpoint.py``'s schema note), and ``__getitem__`` keeps
+``state["lam"]``-style legacy reads working.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree as T
+
+
+# ---------------------------------------------------------------------------
+# typed optimizer states
+# ---------------------------------------------------------------------------
+
+def _register(cls, data_fields):
+    jax.tree_util.register_dataclass(cls, data_fields=list(data_fields),
+                                     meta_fields=[])
+    return cls
+
+
+@dataclasses.dataclass(frozen=True)
+class KFACState:
+    """K-FAC optimizer state (paper Algorithm 2), one field per concern.
+
+    ``factors``  per-block running Kronecker factors {"a", "g"} (S5);
+    ``inv``      per-block damped inverses — or, in ``inv_mode="eigen"``,
+                 the EKFAC eigen state {"qa", "qg", "s", "damp"};
+    ``diag``     diagonal curvature for untagged (elementwise) params;
+    ``delta0``   previous update (the S7 momentum tangent);
+    ``lam`` / ``gamma``  LM damping (S6.5) and factored damping (S6.6);
+    ``m_delta`` / ``loss_prev``  quadratic-model value and last loss, the
+                 inputs to the rho reduction ratio.
+
+    Field names match the historical dict-state keys — the checkpoint
+    migration shim depends on this (old dict checkpoints restore by key).
+    """
+
+    step: jax.Array
+    k_stats: jax.Array
+    lam: jax.Array
+    gamma: jax.Array
+    factors: Any
+    inv: Any
+    diag: Any
+    delta0: Any
+    m_delta: jax.Array
+    loss_prev: jax.Array
+
+    def replace(self, **kw) -> "KFACState":
+        return dataclasses.replace(self, **kw)
+
+    def __getitem__(self, key: str):
+        """Legacy dict-style read (``state["lam"]``)."""
+        return getattr(self, key)
+
+
+_register(KFACState, [f.name for f in dataclasses.fields(KFACState)])
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformState:
+    """State of a first-order :class:`Optimizer` built from a Transform:
+    the step counter plus the chained transform's own state tuple."""
+
+    step: jax.Array
+    inner: Any
+
+    def replace(self, **kw) -> "TransformState":
+        return dataclasses.replace(self, **kw)
+
+    def __getitem__(self, key: str):
+        return getattr(self, key)
+
+
+_register(TransformState, ["step", "inner"])
+
+
+# ---------------------------------------------------------------------------
+# the two protocols
+# ---------------------------------------------------------------------------
+
+class Transform(NamedTuple):
+    """Pure gradient transformation: ``init(params)``,
+    ``update(updates, state, params) -> (updates, state)``."""
+
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """Trainer-facing optimizer bundle (not a pytree — plain callables).
+
+    ``update(grads, state, params, batch, rng)`` returns
+    ``(new_params, state, metrics)``; ``grads=None`` asks the optimizer to
+    run its own gradient pass.  ``engine`` exposes the optimizer-specific
+    stage engine (the K-FAC pipeline publishes its jit-able stages there
+    for lowering / dry-run use); ``transform`` the underlying pure
+    Transform for first-order methods.
+    """
+
+    init: Callable[[Any, Any], Any]
+    update: Callable[..., tuple]
+    reject: Callable[[Any], Any] = lambda state: state
+    state_shardings: Optional[Callable] = None
+    engine: Any = None
+    transform: Optional[Transform] = None
+    name: str = "optimizer"
+
+
+# ---------------------------------------------------------------------------
+# generic transforms (the paper's first-order baselines live on these)
+# ---------------------------------------------------------------------------
+
+def chain(*transforms: Transform) -> Transform:
+    """Compose transforms left-to-right over the update pytree."""
+
+    def init(params):
+        return tuple(tx.init(params) for tx in transforms)
+
+    def update(updates, state, params):
+        new_state = []
+        for tx, s in zip(transforms, state):
+            updates, s = tx.update(updates, s, params)
+            new_state.append(s)
+        return updates, tuple(new_state)
+
+    return Transform(init, update)
+
+
+def identity() -> Transform:
+    return Transform(lambda params: (),
+                     lambda u, s, p: (u, s))
+
+
+def scale(factor: float) -> Transform:
+    """``u <- factor * u`` (e.g. ``scale(-lr)``)."""
+    return Transform(lambda params: (),
+                     lambda u, s, p: (T.tree_scale(u, factor), s))
+
+
+def add_decayed_weights(weight_decay: float) -> Transform:
+    """``u <- u + wd * p``.  Placed before the momentum/Adam rescaling this
+    is classical L2 regularization; placed after it (as the adam chain
+    does), decoupled AdamW-style decay."""
+    return Transform(
+        lambda params: (),
+        lambda u, s, p: (jax.tree.map(
+            lambda ui, pi: ui + weight_decay * pi.astype(ui.dtype), u, p), s))
+
+
+def clip_by_global_norm(max_norm: float) -> Transform:
+    """Rescale ``u`` so its global l2 norm is at most ``max_norm``."""
+
+    def update(u, s, p):
+        gn = jnp.sqrt(T.tree_sqnorm(u))
+        factor = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-20))
+        return T.tree_scale(u, factor), s
+
+    return Transform(lambda params: (), update)
+
+
+def with_momentum(momentum: float) -> Transform:
+    """Heavy-ball velocity: ``v <- momentum * v + u``; emits ``v``.
+
+    Placed *after* ``scale(-lr)`` this is exactly the classical
+    ``v <- m v - lr g; p <- p + v`` recursion the paper tunes SGD with.
+    """
+
+    def init(params):
+        return T.tree_zeros_like(params)
+
+    def update(u, vel, p):
+        vel = jax.tree.map(lambda v, ui: momentum * v + ui, vel, u)
+        return vel, vel
+
+    return Transform(init, update)
+
+
+def scale_by_adam(b1: float = 0.9, b2: float = 0.999,
+                  eps: float = 1e-8) -> Transform:
+    """Adam's bias-corrected first/second-moment rescaling (sans -lr)."""
+
+    def init(params):
+        return {"mu": T.tree_zeros_like(params),
+                "nu": T.tree_zeros_like(params),
+                "count": jnp.int32(0)}
+
+    def update(u, s, p):
+        count = s["count"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, s["mu"], u)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, s["nu"], u)
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - jnp.power(jnp.float32(b1), c)
+        bc2 = 1.0 - jnp.power(jnp.float32(b2), c)
+        out = jax.tree.map(
+            lambda m, v: (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu)
+        return out, {"mu": mu, "nu": nu, "count": count}
+
+    return Transform(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Transform -> Optimizer
+# ---------------------------------------------------------------------------
+
+def apply_updates(params, updates):
+    """``p <- p + u`` in the parameter dtype."""
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def model_value_and_grad(model):
+    """Generic gradient pass over the repo's model protocol
+    (``model.loss(params, None, batch, rng, mode="plain")``)."""
+
+    def f(params, batch, rng):
+        def f1(p):
+            (lt, _), aux = model.loss(p, None, batch, rng, mode="plain")
+            return lt, aux["metrics"]
+
+        (_, metrics), grads = jax.value_and_grad(f1, has_aux=True)(params)
+        return grads, dict(metrics)
+
+    return f
+
+
+def from_transform(transform: Transform, model=None,
+                   name: str = "transform") -> Optimizer:
+    """Lift a pure Transform into a trainer-facing :class:`Optimizer`.
+
+    With ``model`` given, ``update(None, state, params, batch, rng)`` runs
+    one jitted step (gradient pass + transform + apply).  Without a model,
+    callers must pass ``grads`` explicitly (pure optax-style use)."""
+    gradfn = model_value_and_grad(model) if model is not None else None
+
+    def init(params, batch=None):
+        return TransformState(step=jnp.int32(0),
+                              inner=transform.init(params))
+
+    @jax.jit
+    def _apply(grads, state, params):
+        updates, inner = transform.update(grads, state.inner, params)
+        new_params = apply_updates(params, updates)
+        metrics = {"grad_norm": jnp.sqrt(T.tree_sqnorm(grads)),
+                   "delta_norm": jnp.sqrt(T.tree_sqnorm(updates))}
+        return new_params, TransformState(state.step + 1, inner), metrics
+
+    @jax.jit
+    def _step(state, params, batch, rng):
+        grads, metrics = gradfn(params, batch, rng)
+        new_params, state, m2 = _apply(grads, state, params)
+        return new_params, state, {**metrics, **m2}
+
+    def update(grads, state, params, batch=None, rng=None):
+        if grads is None:
+            if gradfn is None:
+                raise ValueError(
+                    f"{name}: no model bound — pass explicit grads")
+            return _step(state, params, batch, rng)
+        return _apply(grads, state, params)
+
+    return Optimizer(init=init, update=update, transform=transform,
+                     name=name)

@@ -8,7 +8,6 @@ implementation.  On a real TPU deployment the launcher flips this on.
 from __future__ import annotations
 
 import os
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -24,9 +24,9 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
+from repro import optimizers
 from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.configs.base import KFACConfig
-from repro.core.kfac import KFAC
 from repro.launch import hlo_cost
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import input_specs, train_batch_specs, rng_spec
@@ -123,7 +123,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool):
 
     if shape.kind == "train":
         lm = LM(cfg, kcfg, mesh, compute_dtype=jnp.bfloat16, fsdp=True)
-        opt = KFAC(lm, kcfg, mesh)
+        opt = optimizers.kfac(lm, kcfg, mesh)
+        eng = opt.engine   # the jit-able pipeline stages, lowered one by one
         params_abs = lm.abstract_params(jnp.float32)
         batch_abs = train_batch_specs(cfg, shape, mesh)
         rng_abs = rng_spec(mesh)
@@ -134,8 +135,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool):
             state_abs, state_sh)
 
         def train_step(state, params, batch, rng):
-            state, grads, metrics = opt.stats_grads(state, params, batch, rng)
-            params, state, um = opt.apply_update(state, params, grads, batch,
+            state, grads, metrics = eng.stats_grads(state, params, batch, rng)
+            params, state, um = eng.apply_update(state, params, grads, batch,
                                                  rng)
             return params, state
 
@@ -146,7 +147,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool):
         rec["aux"] = {}
         # amortized inverse refresh, lowered separately (every T3 steps)
         with mesh:
-            low_inv = jax.jit(opt.refresh_inverses).lower(state_abs)
+            low_inv = jax.jit(eng.refresh_inverses).lower(state_abs)
             comp_inv = low_inv.compile()
         rec["aux"]["refresh_inverses"] = {
             "cost": _cost_dict(comp_inv),

@@ -4,6 +4,10 @@ CPU-scale (this container):
   python -m repro.launch.train --arch llama3.2-1b --reduced --steps 20 \
       --global_batch 8 --seq 64
 
+Any registered optimizer races through the same trainer loop:
+  python -m repro.launch.train --arch llama3.2-1b --reduced \
+      --optimizer adam --lr 1e-3
+
 TPU-pod scale (real deployment): drop --reduced, pass --mesh production
 [--multi_pod]; the same code paths lower onto the 16x16 / 2x16x16 meshes the
 dry-run validates.
@@ -13,11 +17,10 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs import SHAPES, get_config, get_reduced_config
+from repro import optimizers
+from repro.configs import get_config, get_reduced_config
 from repro.configs.base import KFACConfig, TrainConfig
-from repro.core.kfac import KFAC
 from repro.data.pipeline import (SyntheticLMData, make_audio_batch,
                                  make_vlm_batch)
 from repro.launch.mesh import make_local_mesh, make_production_mesh
@@ -56,6 +59,10 @@ def main(argv=None):
                     default="none")
     ap.add_argument("--multi_pod", action="store_true")
     ap.add_argument("--ckpt_dir", default="")
+    ap.add_argument("--optimizer", default="kfac",
+                    choices=["kfac", "sgd_momentum", "adam"])
+    ap.add_argument("--lr", type=float, default=1e-3,
+                    help="learning rate for the first-order baselines")
     ap.add_argument("--lambda_init", type=float, default=10.0)
     ap.add_argument("--inv_mode", default="blkdiag",
                     choices=["blkdiag", "tridiag", "eigen"])
@@ -76,9 +83,11 @@ def main(argv=None):
                        checkpoint_dir=args.ckpt_dir or "/tmp/repro_ckpt",
                        checkpoint_every=max(10, args.steps // 2))
     lm = LM(cfg, kcfg, mesh)
-    opt = KFAC(lm, kcfg, mesh)
+    opt = (optimizers.kfac(lm, kcfg, mesh) if args.optimizer == "kfac"
+           else optimizers.get(args.optimizer, lm, lr=args.lr))
     params = lm.init_params(jax.random.PRNGKey(0))
-    print(f"[train] arch={cfg.name} params={lm.n_params():,}")
+    print(f"[train] arch={cfg.name} params={lm.n_params():,} "
+          f"optimizer={opt.name}")
 
     data = _ArchData(cfg, SyntheticLMData(cfg.vocab_size, args.seq,
                                           args.global_batch, mesh))

@@ -8,8 +8,6 @@ chunk sees the full key range), which bounds the score buffer to
 from __future__ import annotations
 
 import math
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

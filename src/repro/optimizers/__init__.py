@@ -1,0 +1,49 @@
+"""Swappable optimizers behind one functional API.
+
+Every optimizer here is an :class:`repro.core.transform.Optimizer` —
+``(init, update, reject)`` — so the trainer, launcher and benchmarks treat
+K-FAC and the first-order baselines identically::
+
+    from repro import optimizers
+    opt = optimizers.get("kfac", model, kfac_cfg=KFACConfig(...))
+    state = opt.init(params, batch)
+    new_params, state, metrics = opt.update(None, state, params, batch, rng)
+"""
+from __future__ import annotations
+
+from repro.core.transform import Optimizer, Transform, TransformState
+from repro.optimizers.baselines import (adam, adam_transform, sgd_momentum,
+                                        sgd_momentum_transform)
+from repro.optimizers.kfac import KFACEngine, KFACPipeline, kfac
+
+__all__ = ["Optimizer", "Transform", "TransformState", "KFACEngine",
+           "KFACPipeline", "kfac", "sgd_momentum", "sgd_momentum_transform",
+           "adam", "adam_transform", "as_optimizer", "get"]
+
+
+def as_optimizer(opt) -> Optimizer:
+    """Normalize whatever the caller hands the trainer into an Optimizer.
+
+    Accepts an :class:`Optimizer` as-is and wraps a legacy
+    ``repro.core.kfac.KFAC`` engine (the deprecation-shim path) into the
+    staged pipeline."""
+    if isinstance(opt, Optimizer):
+        return opt
+    if isinstance(opt, KFACEngine):
+        return kfac(engine=opt)
+    raise TypeError(f"not an optimizer: {type(opt).__name__} (expected an "
+                    "Optimizer from repro.optimizers, or a legacy KFAC "
+                    "engine)")
+
+
+def get(name: str, model=None, *, kfac_cfg=None, mesh=None,
+        family: str = "categorical", **kw) -> Optimizer:
+    """Optimizer registry for launchers: kfac | sgd_momentum | adam."""
+    if name == "kfac":
+        return kfac(model, kfac_cfg, mesh, family)
+    if name in ("sgd", "sgd_momentum"):
+        return sgd_momentum(model, **kw)
+    if name == "adam":
+        return adam(model, **kw)
+    raise KeyError(f"unknown optimizer {name!r} "
+                   "(expected kfac | sgd_momentum | adam)")

@@ -1,0 +1,48 @@
+"""First-order baselines in the same Optimizer API as the K-FAC pipeline.
+
+The paper's comparison baselines (SGD with momentum, Fig. 10/11; Adam as
+the modern diagonal reference) expressed as chained generic transforms —
+so ``benchmarks/bench_optimizer_race.py`` can race them through the
+*identical* ``Trainer.fit`` loop as K-FAC, with no optimizer-specific
+branches in the trainer.
+"""
+from __future__ import annotations
+
+from repro.core.transform import (Optimizer, Transform, add_decayed_weights,
+                                  chain, from_transform, scale,
+                                  scale_by_adam, with_momentum)
+
+
+def sgd_momentum_transform(lr: float = 0.1, momentum: float = 0.9,
+                           weight_decay: float = 0.0) -> Transform:
+    """Classical heavy-ball: ``v <- m v - lr g; p <- p + v``."""
+    parts = []
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay))
+    parts += [scale(-lr), with_momentum(momentum)]
+    return chain(*parts)
+
+
+def adam_transform(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999,
+                   eps: float = 1e-8, weight_decay: float = 0.0) -> Transform:
+    """Adam; with ``weight_decay`` the decay is decoupled (AdamW): it is
+    added *after* the moment rescaling so it is not normalized by
+    ``sqrt(nu)``."""
+    parts = [scale_by_adam(b1, b2, eps)]
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay))
+    parts.append(scale(-lr))
+    return chain(*parts)
+
+
+def sgd_momentum(model=None, lr: float = 0.1, momentum: float = 0.9,
+                 weight_decay: float = 0.0) -> Optimizer:
+    return from_transform(
+        sgd_momentum_transform(lr, momentum, weight_decay), model,
+        name="sgd_momentum")
+
+
+def adam(model=None, lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    return from_transform(
+        adam_transform(lr, b1, b2, eps, weight_decay), model, name="adam")

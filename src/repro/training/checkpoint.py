@@ -2,11 +2,20 @@
 
 Layout:  <dir>/step_<N>/
            arrays.npz      — flat {path-key: np.ndarray}
-           manifest.json   — step, keys, scalar metadata
+           manifest.json   — step, keys, schema version, scalar metadata
            COMMIT          — written last; absence marks a torn checkpoint
 
 Restore resharding: leaves are device_put against caller-supplied shardings,
 so a checkpoint taken on one mesh restores onto any other (elastic scaling).
+
+State-schema versions (``manifest.json["schema"]``):
+  1 (implicit — pre-version manifests): optimizer state was a raw dict.
+  2: optimizer state is the typed ``KFACState``/``TransformState``
+     dataclass.  The dataclass field names match the old dict keys, and
+     path keys are name-based (dict key / dataclass attribute / sequence
+     index), so v1 checkpoints restore into a v2 dataclass template
+     unchanged — that *is* the migration shim, pinned by
+     ``tests/test_training.py::test_checkpoint_dict_state_migration``.
 """
 from __future__ import annotations
 
@@ -21,14 +30,23 @@ import jax
 import numpy as np
 
 SEP = "::"
+SCHEMA_VERSION = 2
+
+
+def _key_str(k) -> str:
+    # DictKey -> .key, SequenceKey -> .idx, GetAttrKey (registered
+    # dataclasses like KFACState) -> .name: all collapse to the plain
+    # field/key name so dict-era and dataclass-era checkpoints share keys
+    for attr in ("key", "idx", "name"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
 
 
 def _flatten(tree) -> Dict[str, Any]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = SEP.join(
-            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-        flat[key] = leaf
+        flat[SEP.join(_key_str(k) for k in path)] = leaf
     return flat
 
 
@@ -36,8 +54,7 @@ def _unflatten_into(template, flat: Dict[str, np.ndarray]):
     paths = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for path, leaf in paths[0]:
-        key = SEP.join(
-            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        key = SEP.join(_key_str(k) for k in path)
         if key not in flat:
             raise KeyError(f"checkpoint missing leaf {key!r}")
         leaves.append(flat[key])
@@ -73,8 +90,8 @@ class Checkpointer:
         np.savez(os.path.join(tmp, "arrays.npz"),
                  **{k: v for k, v in host.items()})
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump({"step": step, "keys": sorted(host),
-                       "time": time.time()}, f)
+            json.dump({"step": step, "schema": SCHEMA_VERSION,
+                       "keys": sorted(host), "time": time.time()}, f)
         with open(os.path.join(tmp, "COMMIT"), "w") as f:
             f.write("ok")
         shutil.rmtree(final, ignore_errors=True)
@@ -114,6 +131,12 @@ class Checkpointer:
         step = step if step is not None else self.latest_step()
         if step is None:
             return None, None
+        man_path = os.path.join(self.dir, f"step_{step:08d}", "manifest.json")
+        with open(man_path) as f:
+            schema = json.load(f).get("schema", 1)
+        if schema > SCHEMA_VERSION:
+            raise ValueError(f"checkpoint at step {step} has schema "
+                             f"{schema} > supported {SCHEMA_VERSION}")
         path = os.path.join(self.dir, f"step_{step:08d}", "arrays.npz")
         with np.load(path) as z:
             flat = {k: z[k] for k in z.files}

@@ -15,8 +15,6 @@ Straggler mitigation in a synchronous SPMD world:
 """
 from __future__ import annotations
 
-from typing import Any, Dict
-
 import jax
 from jax.sharding import Mesh, NamedSharding
 

@@ -1,14 +1,21 @@
-"""Fault-tolerant K-FAC training loop.
+"""Fault-tolerant, optimizer-agnostic training loop.
 
-Schedule (paper Algorithm 2): stats+grads every step; inverses every T3
-steps and for k<=3; gamma candidate sweep every T2; lambda rule every T1.
+The trainer knows nothing about any particular optimizer: per step it
+calls ``opt.update(None, state, params, batch, rng)`` and lets the
+optimizer run its own schedule (for K-FAC that is paper Algorithm 2 —
+stats+grads every step, inverses every T3 and for k<=3, gamma sweep every
+T2, lambda rule every T1 — all driven off the step counter in the state by
+``repro.optimizers.kfac.KFACPipeline``).  Any
+:class:`repro.core.transform.Optimizer` races through the same loop;
+legacy ``repro.core.kfac.KFAC`` engines are wrapped automatically.
 
 Fault tolerance:
   * atomic async checkpoints every `checkpoint_every` (params + full
     optimizer state + step), auto-restore on construction;
   * SIGTERM/SIGINT preemption hook → synchronous checkpoint, clean exit;
   * non-finite guard: a NaN/Inf update is *skipped* (params untouched,
-    damping raised) rather than poisoning the run;
+    ``opt.reject`` applied — K-FAC raises damping and clears momentum)
+    rather than poisoning the run;
   * elastic restart: checkpoints restore onto any mesh (see elastic.py).
 """
 from __future__ import annotations
@@ -21,42 +28,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import KFACConfig, TrainConfig
-from repro.core.kfac import KFAC
+from repro.configs.base import TrainConfig
+from repro.optimizers import as_optimizer
 from repro.training.checkpoint import Checkpointer
 from repro.utils import tree as T
 
 
 class Trainer:
-    def __init__(self, model, opt: KFAC, train_cfg: TrainConfig, mesh=None,
+    def __init__(self, model, opt, train_cfg: TrainConfig, mesh=None,
                  checkpointer: Optional[Checkpointer] = None):
         self.model = model
-        self.opt = opt
+        self.opt = as_optimizer(opt)
         self.tc = train_cfg
         self.mesh = mesh
         self.ckpt = checkpointer
         self._preempted = False
         self._install_handlers()
-
-        self._stats = jax.jit(opt.stats_grads)
-        self._grads_only = jax.jit(opt.grads_only)
-        self._rescale = jax.jit(opt.rescale_step) if opt.cfg.inv_mode == \
-            "eigen" else None
-        self._refresh = jax.jit(lambda s: opt.refresh_inverses(s, hot=True))
-        self._stagger = opt.stagger_groups()
-        self._refresh_sub = {
-            i: jax.jit(lambda s, ns=tuple(g): opt.refresh_subset(s, ns))
-            for i, g in enumerate(self._stagger)} if opt.cfg.staggered_inverse \
-            else None
-        self._update = jax.jit(
-            lambda s, p, g, b, r: opt.apply_update(s, p, g, b, r))
-        self._multi = jax.jit(opt.refresh_multi)
-        self._update3 = jax.jit(
-            lambda s, p, g, b, r, gs, i3: opt.apply_update(
-                s, p, g, b, r,
-                cand_inv=[jax.tree.map(lambda x: x[c], i3) for c in range(3)],
-                gammas=gs))
-        self._lambda = jax.jit(opt.lambda_step)
 
     # ------------------------------------------------------------------
     def _install_handlers(self):
@@ -70,11 +57,6 @@ class Trainer:
     # ------------------------------------------------------------------
     def fit(self, params, data, steps: int, start_step: int = 0,
             log=print) -> Dict[str, Any]:
-        cfg = self.opt.cfg
-        if cfg.kernel_backend != "xla":
-            log(f"[trainer] curvature blocks on kernel_backend="
-                f"{cfg.kernel_backend} (interpret="
-                f"{jax.default_backend() != 'tpu'})")
         batch0 = data.batch(start_step)
         state = self.opt.init(params, batch0)
 
@@ -93,54 +75,28 @@ class Trainer:
             batch = data.batch(step)
             rng = jax.random.fold_in(jax.random.PRNGKey(self.tc.seed), step)
 
-            if step % cfg.stats_period == 0:
-                state, grads, metrics = self._stats(state, params, batch, rng)
-            else:
-                # stats skipped (straggler/budget mode): grads only
-                state, grads, metrics = self._grads_only(state, params, batch,
-                                                         rng)
+            new_params, state, metrics = self.opt.update(
+                None, state, params, batch, rng)
 
-            use_gamma_sweep = (cfg.t2 > 0 and step > 0 and step % cfg.t2 == 0)
-            if use_gamma_sweep:
-                gs, i3 = self._multi(state)
-                new_params, state, um = self._update3(
-                    state, params, grads, batch, rng, gs, i3)
-            else:
-                if step - start_step < 3:
-                    state = self._refresh(state)
-                elif self._refresh_sub is not None:
-                    # staggered: 1/T3 of the layer inverses per step
-                    state = self._refresh_sub[step % cfg.t3](state)
-                elif step % cfg.t3 == 0:
-                    state = self._refresh(state)
-                if self._rescale is not None:
-                    # eigen mode: per-step EKFAC diagonal re-estimation in
-                    # the (amortized) eigenbases
-                    state = self._rescale(state, grads)
-                new_params, state, um = self._update(
-                    state, params, grads, batch, rng)
-
-            # non-finite guard: skip poisoned updates, raise damping
+            # non-finite guard: skip poisoned updates, let the optimizer
+            # react (K-FAC: 4x damping + momentum reset)
             finite = bool(T.tree_isfinite(new_params)) and np.isfinite(
-                float(um["delta_norm"]))
+                float(metrics.get("delta_norm", 0.0)))
             if finite:
                 params = new_params
             else:
-                state = dict(state, lam=state["lam"] * 4.0,
-                             delta0=T.tree_zeros_like(state["delta0"]))
+                state = self.opt.reject(state)
                 log(f"[trainer] step {step}: non-finite update SKIPPED "
-                    f"(lam -> {float(state['lam']):.3g})")
+                    f"(rejected by {self.opt.name})")
 
-            if cfg.t1 > 0 and (step + 1) % cfg.t1 == 0:
-                state, rho = self._lambda(state, params, batch, rng)
-
-            metrics = {**metrics, **um}
             history.append({k: float(v) for k, v in metrics.items()
                             if jnp.ndim(v) == 0})
             if step % self.tc.log_every == 0:
-                log(f"[trainer] step {step}: loss={history[-1]['loss']:.4f} "
-                    f"alpha={history[-1]['alpha']:.2e} "
-                    f"lam={float(state['lam']):.3g}")
+                extras = " ".join(
+                    f"{k}={history[-1][k]:.2e}" for k in ("alpha", "lam")
+                    if k in history[-1])
+                log(f"[trainer] step {step}: "
+                    f"loss={history[-1]['loss']:.4f} {extras}".rstrip())
 
             if self.ckpt is not None and (
                     (step + 1) % self.tc.checkpoint_every == 0):

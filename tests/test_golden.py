@@ -20,10 +20,10 @@ import jax
 import numpy as np
 import pytest
 
+from repro import optimizers
 from repro.configs.autoencoder import reduced
 from repro.configs.base import KFACConfig, TrainConfig
 from repro.configs.conv_classifier import reduced as conv_reduced
-from repro.core.kfac import KFAC
 from repro.data.pipeline import SyntheticAutoencoderData, SyntheticImageData
 from repro.models.convnet import ConvNet
 from repro.models.mlp import MLP, autoencoder_dims
@@ -53,7 +53,7 @@ def golden_run(inv_mode: str, steps: int = STEPS):
     data = SyntheticAutoencoderData(dims[0], 8, 256, seed=7)
     cfg = KFACConfig(inv_mode=inv_mode, inverse_method="eigh",
                      lambda_init=3.0, t3=5, eta=1e-5)
-    opt = KFAC(mlp, cfg, family="bernoulli")
+    opt = optimizers.kfac(mlp, cfg, family="bernoulli")
     tr = Trainer(mlp, opt, TrainConfig(steps=steps, seed=0, log_every=10_000),
                  None, None)
     out = tr.fit(params, data, steps=steps, log=lambda *_: None)
@@ -112,7 +112,7 @@ def conv_golden_run(inv_mode: str, steps: int = STEPS):
                               128, seed=7)
     kcfg = KFACConfig(inv_mode=inv_mode, inverse_method="eigh",
                       lambda_init=3.0, t3=5, eta=1e-5)
-    opt = KFAC(net, kcfg, family="categorical")
+    opt = optimizers.kfac(net, kcfg, family="categorical")
     tr = Trainer(net, opt, TrainConfig(steps=steps, seed=0, log_every=10_000),
                  None, None)
     out = tr.fit(params, data, steps=steps, log=lambda *_: None)

@@ -1,7 +1,6 @@
 """The trip-count-aware HLO cost analyzer vs known-cost programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch import hlo_cost
 

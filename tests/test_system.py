@@ -1,6 +1,5 @@
 """End-to-end behaviour tests for the K-FAC framework."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_reduced_config

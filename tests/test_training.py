@@ -1,6 +1,4 @@
 """Trainer, checkpointing, fault tolerance, data determinism, serving."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -43,6 +41,58 @@ def test_checkpoint_roundtrip(tmp_path):
     ck.save(11, tree, block=True)
     ck.save(12, tree, block=True)
     assert len(ck.all_steps()) == 2
+
+
+def test_checkpoint_dict_state_migration(tmp_path):
+    """Migration shim: a checkpoint written with the pre-dataclass *dict*
+    optimizer state (schema 1) restores into the typed ``KFACState``
+    template unchanged — field names and path keys line up."""
+    import dataclasses
+    import json as _json
+
+    from repro import optimizers
+    from repro.core.transform import KFACState
+
+    mlp = MLP([16, 8, 16], loss="bernoulli")
+    params = mlp.init_params(jax.random.PRNGKey(0), sparse=False)
+    data = SyntheticAutoencoderData(16, 4, 64, seed=1)
+    batch = data.batch(0)
+    opt = optimizers.kfac(mlp, KFACConfig(lambda_init=1.0),
+                          family="bernoulli")
+    state = opt.init(params, batch)
+    params, state, _ = opt.update(None, state, params, batch,
+                                  jax.random.PRNGKey(1))
+
+    # the raw dict the pre-redesign optimizer kept as its state
+    old_dict = {f.name: getattr(state, f.name)
+                for f in dataclasses.fields(state)}
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(3, {"params": params, "state": old_dict}, block=True)
+
+    # new writers stamp the schema version; rewrite the manifest without it
+    # to simulate a genuinely old (schema-1, pre-version-field) checkpoint
+    man_path = tmp_path / "step_00000003" / "manifest.json"
+    man = _json.loads(man_path.read_text())
+    assert man["schema"] == 2
+    del man["schema"]
+    man_path.write_text(_json.dumps(man))
+
+    step, got = ck.restore({"params": params, "state": state})
+    assert step == 3
+    assert isinstance(got["state"], KFACState)
+    for f in dataclasses.fields(state):
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_array_equal(a, b, err_msg=f.name),
+            getattr(state, f.name), getattr(got["state"], f.name))
+
+    # a future schema must refuse to restore rather than misread
+    man["schema"] = 99
+    man_path.write_text(_json.dumps(man))
+    try:
+        ck.restore({"params": params, "state": state})
+        assert False, "expected schema-version error"
+    except ValueError as e:
+        assert "schema" in str(e)
 
 
 def test_checkpoint_torn_write_ignored(tmp_path):
