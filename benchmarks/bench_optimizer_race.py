@@ -40,11 +40,11 @@ def race(model, params, data, opt, steps):
 
 
 def run_kfac(steps=30, inv_mode="blkdiag", momentum=True, rescale=True,
-             lambda_init=3.0):
+             lambda_init=3.0, refresh_mode="serial"):
     mlp, params, data = make_problem()
     cfg = KFACConfig(inv_mode=inv_mode, use_momentum=momentum,
                      use_rescale=rescale, lambda_init=lambda_init, t3=5,
-                     fixed_lr=0.02, eta=1e-5)
+                     fixed_lr=0.02, eta=1e-5, refresh_mode=refresh_mode)
     opt = optimizers.kfac(mlp, cfg, family="bernoulli")
     return race(mlp, params, data, opt, steps)
 
@@ -97,6 +97,13 @@ def run(steps=30):
     rows.append(("kfac_eigen", secs / steps * 1e6, kf[-1]))
     kf, secs = run_kfac(steps, "blkdiag", momentum=False)
     rows.append(("kfac_no_momentum", secs / steps * 1e6, kf[-1]))
+    # distributed refresh service (repro.distributed): same optimizer, the
+    # T3 inverse refresh executed block-parallel / async double-buffered.
+    # On this 1-device CPU harness these rows track the *scheduling
+    # overhead* (parallel speedups need a real mesh — see bench_refresh.py)
+    for rmode in ("staggered", "sharded", "overlap"):
+        kf, secs = run_kfac(steps, "blkdiag", refresh_mode=rmode)
+        rows.append((f"kfac_refresh_{rmode}", secs / steps * 1e6, kf[-1]))
     kf, secs = run_conv_kfac(steps, "blkdiag")
     rows.append(("kfac_conv_classifier", secs / steps * 1e6, kf[-1]))
     kf, secs = run_conv_kfac(steps, "eigen")

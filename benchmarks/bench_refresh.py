@@ -1,0 +1,145 @@
+"""Refresh-service bench: serial vs sharded vs overlap inverse refresh.
+
+Times the T3 d³ refresh — the cost the paper amortizes temporally (S8)
+and ``repro.distributed`` spreads spatially — on a forced 8-device CPU
+mesh, across the registered bench configs:
+
+  * ``serial``   — every device recomputes every block (today's spike);
+  * ``sharded``  — block-parallel shard_map refresh, ~Sum(d^3)/P critical
+                   path (same bits, less wall time);
+  * ``overlap``  — dispatch latency of the async double-buffered mode:
+                   what the *training step* actually waits for when the
+                   refresh runs concurrently.
+
+This module must own the process (it forces
+``--xla_force_host_platform_device_count=8`` before jax initializes), so
+it is NOT part of ``benchmarks/run.py``'s in-process suite — run it
+directly::
+
+    PYTHONPATH=src:. python benchmarks/bench_refresh.py
+
+Output: ``name,us_per_call,speedup_vs_serial`` CSV rows per config.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro import optimizers  # noqa: E402
+from repro.configs.base import KFACConfig  # noqa: E402
+from repro.data.pipeline import (SyntheticAutoencoderData,  # noqa: E402
+                                 SyntheticImageData)
+from repro.distributed.refresh import build_sharded_refresh  # noqa: E402
+from repro.models.mlp import MLP  # noqa: E402
+
+REPS = 5
+
+
+def _autoencoder(dims, n=64):
+    mlp = MLP(dims, nonlin="tanh", loss="bernoulli")
+    params = mlp.init_params(jax.random.PRNGKey(0), sparse=False)
+    data = SyntheticAutoencoderData(dims[0], 4, n, seed=7)
+    return mlp, params, data, "bernoulli"
+
+
+def _conv(n=64):
+    from repro.configs.conv_classifier import reduced
+    from repro.models.convnet import ConvNet
+    cfg = reduced()
+    net = ConvNet(cfg)
+    params = net.init_params(jax.random.PRNGKey(0))
+    data = SyntheticImageData(cfg.image_size, cfg.channels, cfg.n_classes,
+                              n, seed=7)
+    return net, params, data, "categorical"
+
+
+# registered bench configs: name -> problem factory.  The deep_mlp row is
+# the representative production shape (eight 512-wide factor inversions per
+# side) where the d³ term dominates scheduling overhead; the tiny
+# autoencoder/conv rows sit below the sharding break-even on purpose —
+# they document the fixed shard_map + collective cost you pay to spread
+# work that a single device finishes in ~1ms anyway.
+CONFIGS = {
+    "autoencoder": lambda: _autoencoder([64, 32, 16, 8, 16, 32, 64]),
+    "deep_mlp_512": lambda: _autoencoder([512] * 9),
+    "conv_classifier": _conv,
+}
+
+
+def _time(fn, reps=REPS):
+    fn()                                    # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_config(name, factory, inv_mode="blkdiag"):
+    # inverse_method="ns" (the production default): Newton–Schulz is
+    # matmul-only, so the per-block work parallelizes cleanly across the
+    # fake CPU devices.  (eigh on CPU inside an SPMD executable cannot hit
+    # the LAPACK custom call and falls back to the slow pure-HLO path — a
+    # CPU-only artifact; on TPU eigh is the HLO implementation either way.)
+    model, params, data, family = factory()
+    kcfg = KFACConfig(inv_mode=inv_mode, inverse_method="ns",
+                      lambda_init=3.0, t3=5, eta=1e-5)
+    opt = optimizers.kfac(model, kcfg, family=family)
+    eng = opt.engine
+    state = opt.init(params, data.batch(0))
+    state, grads, _ = jax.jit(eng.stats_grads)(
+        state, params, data.batch(0), jax.random.PRNGKey(1))
+
+    serial = jax.jit(lambda s: eng.refresh_inverses(s, hot=True))
+    sharded = build_sharded_refresh(eng)
+
+    t_serial = _time(lambda: jax.block_until_ready(serial(state)))
+    t_sharded = _time(lambda: jax.block_until_ready(
+        sharded(state.factors, state.gamma, state.inv)))
+    # overlap: the trainer-visible stall is the async dispatch, not the
+    # refresh itself — time the call without blocking on the result
+    t_dispatch = _time(
+        lambda: sharded(state.factors, state.gamma, state.inv))
+
+    rows = [
+        (f"refresh_{name}_serial", t_serial * 1e6, 1.0),
+        (f"refresh_{name}_sharded", t_sharded * 1e6,
+         t_serial / max(t_sharded, 1e-12)),
+        (f"refresh_{name}_overlap_dispatch", t_dispatch * 1e6,
+         t_serial / max(t_dispatch, 1e-12)),
+    ]
+    return rows, t_serial, t_sharded
+
+
+def run():
+    all_rows = []
+    for name, factory in CONFIGS.items():
+        rows, _, _ = bench_config(name, factory)
+        all_rows.extend(rows)
+    return all_rows
+
+
+def main():
+    print(f"# devices: {len(jax.devices())}")
+    print("name,us_per_call,speedup_vs_serial")
+    slower = []
+    for name, factory in CONFIGS.items():
+        rows, t_serial, t_sharded = bench_config(name, factory)
+        for r in rows:
+            print(f"{r[0]},{r[1]:.0f},{r[2]:.4f}", flush=True)
+        if t_sharded >= t_serial:
+            slower.append(name)
+    if slower:
+        print(f"# WARNING: sharded refresh not faster for: {slower}")
+
+
+if __name__ == "__main__":
+    main()

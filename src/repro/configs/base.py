@@ -156,7 +156,20 @@ class KFACConfig:
                                       # the Pallas kernels (ragged shapes
                                       # fall back to the einsum path)
     stats_period: int = 1             # update stats every N steps
-    staggered_inverse: bool = False   # round-robin layer refresh (beyond-paper)
+    staggered_inverse: bool = False   # legacy alias for refresh_mode="staggered"
+    refresh_mode: str = "serial"      # serial | staggered | sharded | overlap:
+                                      # how the T3 inverse refresh is executed
+                                      # (repro.distributed — staggered spreads
+                                      # blocks over T3 steps, sharded
+                                      # bin-packs them over the mesh, overlap
+                                      # double-buffers the sharded refresh
+                                      # asynchronously under a bounded
+                                      # staleness counter; docs/distributed.md)
+    overlap_deterministic: bool = False
+                                      # overlap mode: commit buffer swaps only
+                                      # at refresh-due steps instead of as
+                                      # soon as is_ready — wall-clock stops
+                                      # affecting the trajectory (golden runs)
     damping_floor: float = 1e-8
 
     def replace(self, **kw) -> "KFACConfig":

@@ -73,10 +73,20 @@ class KFACState:
     ``delta0``   previous update (the S7 momentum tangent);
     ``lam`` / ``gamma``  LM damping (S6.5) and factored damping (S6.6);
     ``m_delta`` / ``loss_prev``  quadratic-model value and last loss, the
-                 inputs to the rho reduction ratio.
+                 inputs to the rho reduction ratio;
+    ``staleness``  steps the in-flight asynchronous refresh has been
+                 pending (``refresh_mode="overlap"``; bounded by T3 —
+                 the controller blocks and swaps at the ceiling).  Stays
+                 0 in the synchronous refresh modes;
+    ``inv_pending``  the overlap mode's second inverse buffer (same
+                 structure as ``inv``; the async swap target) — ``None``
+                 in the other refresh modes, so they pay no extra state.
 
     Field names match the historical dict-state keys — the checkpoint
-    migration shim depends on this (old dict checkpoints restore by key).
+    migration shim depends on this (old dict checkpoints restore by key;
+    the v3 fields ``staleness``/``inv_pending`` fall back to template
+    values when restoring schema<=2 checkpoints, see
+    ``training/checkpoint.py``).
     """
 
     step: jax.Array
@@ -89,6 +99,9 @@ class KFACState:
     delta0: Any
     m_delta: jax.Array
     loss_prev: jax.Array
+    staleness: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.int32(0))
+    inv_pending: Any = None
 
     def replace(self, **kw) -> "KFACState":
         return dataclasses.replace(self, **kw)
@@ -137,16 +150,21 @@ class Optimizer:
 
     ``update(grads, state, params, batch, rng)`` returns
     ``(new_params, state, metrics)``; ``grads=None`` asks the optimizer to
-    run its own gradient pass.  ``engine`` exposes the optimizer-specific
-    stage engine (the K-FAC pipeline publishes its jit-able stages there
-    for lowering / dry-run use); ``transform`` the underlying pure
-    Transform for first-order methods.
+    run its own gradient pass.  ``poll(state) -> state``, when set, is the
+    trainer's end-of-step swap hook: optimizers running asynchronous side
+    computations (K-FAC's ``refresh_mode="overlap"`` double-buffered
+    inverse refresh) commit any finished buffer here without blocking.
+    ``engine`` exposes the optimizer-specific stage engine (the K-FAC
+    pipeline publishes its jit-able stages there for lowering / dry-run
+    use); ``transform`` the underlying pure Transform for first-order
+    methods.
     """
 
     init: Callable[[Any, Any], Any]
     update: Callable[..., tuple]
     reject: Callable[[Any], Any] = lambda state: state
     state_shardings: Optional[Callable] = None
+    poll: Optional[Callable[[Any], Any]] = None
     engine: Any = None
     transform: Optional[Transform] = None
     name: str = "optimizer"

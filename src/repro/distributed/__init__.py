@@ -1,0 +1,25 @@
+"""Distributed curvature service: plan / sharded refresh / async overlap.
+
+Selected via ``KFACConfig.refresh_mode``:
+
+  * ``serial``    — every device recomputes every inverse on T3 steps
+                    (the paper's baseline schedule);
+  * ``staggered`` — temporal amortization: 1/T3 of the blocks per step,
+                    groups balanced by the d³ cost model;
+  * ``sharded``   — spatial: :mod:`.refresh` shard_maps the block set
+                    over the mesh (Σd³ → ~Σd³/P), bitwise-identical
+                    results;
+  * ``overlap``   — :mod:`.overlap` dispatches the sharded refresh
+                    asynchronously and double-buffers the swap under an
+                    explicit bounded-staleness counter.
+
+See ``docs/distributed.md``.
+"""
+from repro.distributed.overlap import OverlapController
+from repro.distributed.plan import (CHAIN, RefreshPlan, bin_pack, block_cost,
+                                    build_plan, matrix_inverse_cost)
+from repro.distributed.refresh import build_sharded_refresh, flat_refresh_mesh
+
+__all__ = ["CHAIN", "RefreshPlan", "bin_pack", "block_cost", "build_plan",
+           "matrix_inverse_cost", "build_sharded_refresh",
+           "flat_refresh_mesh", "OverlapController"]

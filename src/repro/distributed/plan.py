@@ -1,0 +1,126 @@
+"""RefreshPlan: cost-model bin-packing of curvature blocks over shards.
+
+The paper's headline economics rest on amortizing the d³ factor inversions
+(S8: computed "only occasionally") — and on the observation that per-layer
+inverses are *independent*, so the Σd³ refresh spike parallelizes across
+devices.  This module owns the assignment: every curvature block gets a
+scalar inversion-cost estimate from its factor layout (the same
+``LayerMeta`` shape metadata the block registry dispatches on), and
+:func:`bin_pack` spreads the blocks across ``n_shards`` bins with the
+longest-processing-time greedy rule.
+
+The same planner also balances the *temporal* round-robin
+(``KFACEngine.stagger_groups``): T3 staggered-refresh groups are bins too,
+so the per-step d³ work is even instead of whatever layer-declaration
+order happened to produce.
+
+Greedy LPT gives the classical guarantee used by the balance property
+test: ``max_load − max_single_cost ≤ min_load`` — no bin exceeds the
+ideal by more than one block, so the max/min device cost ratio is bounded
+whenever no single block dominates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping
+
+# pseudo-block key for the tridiagonal chain's Ψ/Σ precompute (owned by a
+# single shard like any block; it needs every layer's factors, which the
+# sharded refresh replicates anyway)
+CHAIN = "__chain__"
+
+
+def matrix_inverse_cost(dim: int, kind: str, blocks: int, lead: int) -> float:
+    """O(d³)-model cost of inverting/eigendecomposing one factor side.
+
+    ``diag`` factors cost d (elementwise reciprocal); ``block`` factors
+    invert `blocks` independent (d/blocks)² matrices; full factors d³.
+    ``lead`` multiplies in the stacked/expert batch dims.
+    """
+    if kind == "diag":
+        return float(lead * dim)
+    if kind == "block":
+        blocks = max(1, blocks)
+        return float(lead * blocks * (dim // blocks) ** 3)
+    return float(lead * dim ** 3)
+
+
+def block_cost(meta) -> float:
+    """d³ refresh cost of one curvature block (both factor sides)."""
+    lead = max(1, meta.n_stack) * max(1, meta.n_expert)
+    return (matrix_inverse_cost(meta.a_dim, meta.a_kind, meta.a_blocks, lead)
+            + matrix_inverse_cost(meta.g_dim, meta.g_kind, meta.g_blocks,
+                                  lead))
+
+
+def bin_pack(costs: Mapping[str, float], n_bins: int) -> Dict[str, int]:
+    """Deterministic LPT greedy: heaviest item first, into the least-loaded
+    bin (ties by bin index; item ties by name).  Guarantees
+    ``max_load - max(costs) <= min_load``."""
+    if n_bins < 1:
+        raise ValueError(f"n_bins must be >= 1, got {n_bins}")
+    loads = [0.0] * n_bins
+    owners: Dict[str, int] = {}
+    for name in sorted(costs, key=lambda k: (-costs[k], str(k))):
+        b = min(range(n_bins), key=lambda i: (loads[i], i))
+        owners[name] = b
+        loads[b] += costs[name]
+    return owners
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshPlan:
+    """Assignment of curvature blocks to refresh shards.
+
+    ``owners[name]`` is the shard that computes block ``name``'s damped
+    inverse / eigen state; ``costs[name]`` the d³ model cost it was
+    packed by.  The plan is pure metadata — :mod:`.refresh` turns it into
+    the shard_map program, and ``KFACEngine.stagger_groups`` reuses it
+    with ``n_shards = T3`` for the temporal round-robin.
+    """
+
+    n_shards: int
+    owners: Mapping[str, int]
+    costs: Mapping[str, float]
+
+    def groups(self) -> List[List[str]]:
+        """Per-shard block-name lists (deterministic order)."""
+        out: List[List[str]] = [[] for _ in range(self.n_shards)]
+        for name in sorted(self.owners):
+            out[self.owners[name]].append(name)
+        return out
+
+    def shard_costs(self) -> List[float]:
+        loads = [0.0] * self.n_shards
+        for name, shard in self.owners.items():
+            loads[shard] += self.costs[name]
+        return loads
+
+    def balance_ratio(self) -> float:
+        """max/min shard cost over *loaded* shards (inf if degenerate)."""
+        loaded = [c for c in self.shard_costs() if c > 0]
+        if not loaded:
+            return 1.0
+        return max(loaded) / min(loaded)
+
+    def serial_cost(self) -> float:
+        return sum(self.costs.values())
+
+    def parallel_cost(self) -> float:
+        """Critical-path cost: the most-loaded shard (~Σd³/P when even)."""
+        return max(self.shard_costs() or [0.0])
+
+
+def build_plan(blocks: Mapping[str, object], n_shards: int, *,
+               chain: bool = False) -> RefreshPlan:
+    """Bin-pack the registry's blocks over ``n_shards`` by d³ cost.
+
+    ``chain=True`` adds the tridiagonal-chain precompute (:data:`CHAIN`)
+    as one more ownable unit, costed like a full serial pass over the
+    layer blocks (TRI.precompute touches every layer's factors).
+    """
+    costs = {name: block_cost(blk.meta) for name, blk in blocks.items()}
+    if chain:
+        costs[CHAIN] = max(sum(costs.values()), 1.0)
+    owners = bin_pack(costs, n_shards)
+    return RefreshPlan(n_shards=n_shards, owners=owners, costs=costs)

@@ -153,6 +153,24 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool):
             "cost": _cost_dict(comp_inv),
             "hlo": hlo_cost.analyze(comp_inv.as_text()),
         }
+        # the distributed refresh service (refresh_mode="sharded"/"overlap"):
+        # block-parallel inverses over the flattened mesh, lowered as its
+        # own stage so the per-device Σd³/P cost is visible next to the
+        # serial spike above
+        from repro.distributed.refresh import build_sharded_refresh
+        shr = build_sharded_refresh(eng, mesh=mesh)
+        gamma_abs = jax.ShapeDtypeStruct((), jnp.float32)
+        with mesh:
+            comp_shr = shr.lower(state_abs.factors, gamma_abs,
+                                 state_abs.inv).compile()
+        rec["aux"]["refresh_sharded"] = {
+            "plan": {"n_shards": shr.plan.n_shards,
+                     "serial_cost": shr.plan.serial_cost(),
+                     "parallel_cost": shr.plan.parallel_cost(),
+                     "balance_ratio": shr.plan.balance_ratio()},
+            "cost": _cost_dict(comp_shr),
+            "hlo": hlo_cost.analyze(comp_shr.as_text()),
+        }
     else:
         lm = LM(cfg, kcfg, mesh, compute_dtype=jnp.bfloat16, fsdp=False)
         # huge (MoE) models cannot hold bf16 params model-sharded only at

@@ -66,6 +66,12 @@ def main(argv=None):
     ap.add_argument("--lambda_init", type=float, default=10.0)
     ap.add_argument("--inv_mode", default="blkdiag",
                     choices=["blkdiag", "tridiag", "eigen"])
+    ap.add_argument("--refresh_mode", default="serial",
+                    choices=["serial", "staggered", "sharded", "overlap"],
+                    help="how the T3 inverse refresh executes: serially, "
+                         "staggered over T3 steps, block-parallel over the "
+                         "mesh, or asynchronously double-buffered "
+                         "(repro.distributed; docs/distributed.md)")
     ap.add_argument("--tau1", type=float, default=1.0)
     args = ap.parse_args(argv)
 
@@ -78,7 +84,7 @@ def main(argv=None):
         mesh = mesh()
 
     kcfg = KFACConfig(lambda_init=args.lambda_init, inv_mode=args.inv_mode,
-                      tau1=args.tau1, t3=5)
+                      refresh_mode=args.refresh_mode, tau1=args.tau1, t3=5)
     tcfg = TrainConfig(steps=args.steps,
                        checkpoint_dir=args.ckpt_dir or "/tmp/repro_ckpt",
                        checkpoint_every=max(10, args.steps // 2))

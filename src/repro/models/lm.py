@@ -836,7 +836,6 @@ class LM:
         s_ax = tuple(s_axes) if s_axes else None
         hd_ax = None
         ng = self.n_groups
-        lead = (ng,)
 
         def kv():
             return {

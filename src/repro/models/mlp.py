@@ -100,7 +100,6 @@ class MLP:
         """Returns ((loss_true, loss_sampled), aux) — same contract as LM."""
         tg = Tagger(mode, probes, self.contract_map)
         z = self.logits(params, batch["x"], tg)
-        n = z.shape[0]
         lt = jnp.mean(self._nll(z, batch["y"]))
         ys = self.sample_targets(jax.lax.stop_gradient(z), rng)
         ls = jnp.mean(self._nll(z, ys))

@@ -88,6 +88,17 @@ class KFACEngine:
         if cfg.inv_mode not in ("blkdiag", "tridiag", "eigen"):
             raise ValueError(f"unknown inv_mode {cfg.inv_mode!r}"
                              " (expected 'blkdiag', 'tridiag' or 'eigen')")
+        if cfg.refresh_mode not in ("serial", "staggered", "sharded",
+                                    "overlap"):
+            raise ValueError(
+                f"unknown refresh_mode {cfg.refresh_mode!r} (expected "
+                "'serial', 'staggered', 'sharded' or 'overlap')")
+        # legacy knob: staggered_inverse=True was the only way to ask for
+        # the round-robin refresh before refresh_mode existed
+        self.refresh_mode = ("staggered"
+                             if cfg.refresh_mode == "serial"
+                             and cfg.staggered_inverse
+                             else cfg.refresh_mode)
         self.model = model
         self.cfg = cfg
         self.mesh = mesh
@@ -143,6 +154,10 @@ class KFACEngine:
             delta0=T.tree_zeros_like(T.tree_cast(params, jnp.float32)),
             m_delta=jnp.float32(-1.0),
             loss_prev=jnp.float32(0.0),
+            staleness=jnp.int32(0),
+            # overlap mode double-buffers the inverses; the other refresh
+            # modes keep the slot empty (None) and pay no extra state
+            inv_pending=(inv if self.refresh_mode == "overlap" else None),
         )
 
     def _identity_inverses(self):
@@ -192,6 +207,10 @@ class KFACEngine:
             factors=fac_sh, inv=inv_sh, diag=diag_sh,
             delta0=param_shardings,
             m_delta=rep, loss_prev=rep,
+            staleness=rep,
+            # the pending buffer shards exactly like the live inverses
+            inv_pending=(inv_sh if state_abs.inv_pending is not None
+                         else None),
         )
 
     # ------------------------------------------------------------------
@@ -325,10 +344,12 @@ class KFACEngine:
         return state.replace(inv=inv)
 
     def stagger_groups(self):
-        """Partition layer names into T3 round-robin refresh groups."""
-        names = [n for n in self.metas]
-        t3 = max(1, self.cfg.t3)
-        return [names[i::t3] for i in range(t3)]
+        """Partition layer names into T3 staggered refresh groups, balanced
+        by the d³ inversion cost model (repro.distributed.plan) instead of
+        the old declaration-order round-robin — the per-step refresh work
+        is even regardless of how layer sizes interleave."""
+        from repro.distributed.plan import build_plan
+        return build_plan(self.blocks, max(1, self.cfg.t3)).groups()
 
     def grads_only(self, state: KFACState, params, batch, rng):
         """Gradient pass without the statistics pass (straggler/budget mode
@@ -530,7 +551,19 @@ class KFACPipeline:
         self._refresh_sub = {
             i: jax.jit(lambda s, ns=tuple(g): eng.refresh_subset(s, ns))
             for i, g in enumerate(eng.stagger_groups())} \
-            if cfg.staggered_inverse else None
+            if eng.refresh_mode == "staggered" else None
+        # distributed curvature service (repro.distributed): the sharded
+        # block-parallel refresh, plus the async double-buffer controller
+        self._refresh_sharded = None
+        self._overlap = None
+        if eng.refresh_mode in ("sharded", "overlap"):
+            from repro.distributed.overlap import OverlapController
+            from repro.distributed.refresh import build_sharded_refresh
+            self._refresh_sharded = build_sharded_refresh(eng)
+            if eng.refresh_mode == "overlap":
+                self._overlap = OverlapController(
+                    self._refresh_sharded, bound=max(1, cfg.t3),
+                    deterministic=cfg.overlap_deterministic)
         self._update = jax.jit(
             lambda s, p, g, b, r: eng.apply_update(s, p, g, b, r))
         self._multi = jax.jit(eng.refresh_multi)
@@ -568,19 +601,39 @@ class KFACPipeline:
                 ctx.state, ctx.params, ctx.batch, ctx.rng)
         ctx.metrics.update(metrics)
 
+    def _full_refresh(self, state: KFACState) -> KFACState:
+        """Synchronous full refresh via the mode's executor: the serial
+        engine stage, or the block-parallel sharded service."""
+        if self._refresh_sharded is not None:
+            inv = self._refresh_sharded(state.factors, state.gamma,
+                                        state.inv)
+            return state.replace(inv=inv)
+        return self._refresh(state)
+
     def _stage_refresh(self, ctx: StepContext):
         cfg = self.engine.cfg
         if cfg.t2 > 0 and ctx.step > 0 and ctx.step % cfg.t2 == 0:
             # gamma sweep (S6.6): stacked candidate inverses; selection
             # happens inside the quadratic-model stage
             ctx.candidates = self._multi(ctx.state)
+            if self._overlap is not None:
+                # the sweep recomputes inverses synchronously from the
+                # current factors — an older in-flight buffer must not
+                # overwrite them later
+                self._overlap.cancel()
+                ctx.state = ctx.state.replace(staleness=jnp.int32(0))
+        elif self._overlap is not None and not ctx.warmup:
+            ctx.state = self._overlap.on_refresh_stage(
+                ctx.state, ctx.step, due=(ctx.step % cfg.t3 == 0))
+            ctx.metrics["staleness"] = ctx.state.staleness
         elif ctx.warmup:
-            ctx.state = self._refresh(ctx.state)
+            ctx.state = self._full_refresh(ctx.state)
         elif self._refresh_sub is not None:
-            # staggered: 1/T3 of the layer inverses per step
+            # staggered: 1/T3 of the layer inverses per step, groups
+            # balanced by the d³ cost model
             ctx.state = self._refresh_sub[ctx.step % cfg.t3](ctx.state)
         elif ctx.step % cfg.t3 == 0:
-            ctx.state = self._refresh(ctx.state)
+            ctx.state = self._full_refresh(ctx.state)
 
     def _stage_eigen_rescale(self, ctx: StepContext):
         if self._rescale is not None and ctx.candidates is None:
@@ -613,7 +666,16 @@ class KFACPipeline:
     # -- Optimizer protocol --------------------------------------------
     def init(self, params, batch) -> KFACState:
         self._start = None            # new run: re-arm the warmup refreshes
+        if self._overlap is not None:
+            self._overlap.reset()     # drop any in-flight refresh buffer
         return self.engine.init(params, batch)
+
+    def poll(self, state: KFACState) -> KFACState:
+        """Trainer end-of-step hook: commit a finished async refresh
+        buffer (overlap mode); never blocks, no-op otherwise."""
+        if self._overlap is not None and isinstance(state, KFACState):
+            return self._overlap.poll(state)
+        return state
 
     def update(self, grads, state: KFACState, params, batch, rng):
         step = int(state.step)        # schedule off the state, not a loop var
@@ -649,5 +711,6 @@ def kfac(model=None, cfg: Optional[KFACConfig] = None, mesh=None,
                                                        mesh, family)
     pipe = KFACPipeline(eng)
     return Optimizer(init=pipe.init, update=pipe.update, reject=pipe.reject,
-                     state_shardings=eng.state_shardings, engine=eng,
-                     name=f"kfac_{eng.cfg.inv_mode}")
+                     state_shardings=eng.state_shardings,
+                     poll=pipe.poll if eng.refresh_mode == "overlap" else None,
+                     engine=eng, name=f"kfac_{eng.cfg.inv_mode}")

@@ -36,7 +36,16 @@ class Engine:
         self.b = batch_slots
         self.max_len = max_len
         cache_defs = model.cache_defs(batch_slots, max_len)
-        self.cache = PM.materialize(jax.random.PRNGKey(0), cache_defs)
+        # the KV cache must start ZEROED: a fresh (or refilled) slot
+        # attends positions it never wrote, and any non-zero init there
+        # leaks into its logits.  This used to go through the *weight*
+        # initializer (PM.materialize with a hardcoded PRNGKey(0)) and was
+        # only correct because every cache ParamDef happens to carry
+        # init="zeros" — a convention one new cache leaf could silently
+        # break.  Build the zeros structurally instead; no RNG involved.
+        self.cache = jax.tree.map(
+            lambda d: jnp.zeros(d.shape, d.dtype), cache_defs,
+            is_leaf=PM.is_def)
         self.pos = np.zeros(batch_slots, np.int32)      # per-slot next pos
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.rng = jax.random.PRNGKey(rng_seed)

@@ -16,6 +16,17 @@ State-schema versions (``manifest.json["schema"]``):
      index), so v1 checkpoints restore into a v2 dataclass template
      unchanged — that *is* the migration shim, pinned by
      ``tests/test_training.py::test_checkpoint_dict_state_migration``.
+  3: ``KFACState`` gained the distributed-refresh fields ``staleness``
+     and ``inv_pending`` (refresh_mode="overlap" double buffer).  Older
+     checkpoints simply lack those keys; on restore of schema<=2 the
+     missing v3 leaves fall back to the caller's template values (fresh
+     ``opt.init`` defaults: staleness 0, identity pending buffer) —
+     pinned by ``test_checkpoint_v2_state_migration``.  ``inv_pending``
+     leaves additionally exist only for overlap-mode runs, so they stay
+     defaultable at schema 3 too: restoring a sync-mode checkpoint into
+     an overlap template (flipping refresh_mode on an existing run) seeds
+     the double buffer from the template — pinned by
+     ``test_checkpoint_refresh_mode_switch``.
 """
 from __future__ import annotations
 
@@ -30,7 +41,17 @@ import jax
 import numpy as np
 
 SEP = "::"
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
+
+# state fields that did not exist before schema 3: restoring an older
+# checkpoint keeps the template's (fresh-init) values for these
+_V3_FIELDS = ("staleness", "inv_pending")
+# ... and fields whose *presence* depends on run config, not schema:
+# inv_pending only exists in refresh_mode="overlap" states, so a schema-3
+# checkpoint written in a sync mode has no such leaves — restoring it into
+# an overlap template (switching refresh modes on an existing run) must
+# fall back to the template's fresh double buffer instead of hard-failing
+_MODE_FIELDS = ("inv_pending",)
 
 
 def _key_str(k) -> str:
@@ -50,12 +71,19 @@ def _flatten(tree) -> Dict[str, Any]:
     return flat
 
 
-def _unflatten_into(template, flat: Dict[str, np.ndarray]):
+def _unflatten_into(template, flat: Dict[str, np.ndarray],
+                    defaultable: tuple = ()):
     paths = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for path, leaf in paths[0]:
-        key = SEP.join(_key_str(k) for k in path)
+        parts = [_key_str(k) for k in path]
+        key = SEP.join(parts)
         if key not in flat:
+            if any(p in defaultable for p in parts):
+                # schema migration: field added after this checkpoint was
+                # written — keep the template's fresh-init value
+                leaves.append(leaf)
+                continue
             raise KeyError(f"checkpoint missing leaf {key!r}")
         leaves.append(flat[key])
     return jax.tree_util.tree_unflatten(paths[1], leaves)
@@ -140,7 +168,9 @@ class Checkpointer:
         path = os.path.join(self.dir, f"step_{step:08d}", "arrays.npz")
         with np.load(path) as z:
             flat = {k: z[k] for k in z.files}
-        tree = _unflatten_into(template, flat)
+        tree = _unflatten_into(
+            template, flat,
+            defaultable=_V3_FIELDS if schema < 3 else _MODE_FIELDS)
         if shardings is not None:
             tree = jax.tree.map(
                 lambda x, s: jax.device_put(x, s) if s is not None else

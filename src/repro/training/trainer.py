@@ -89,6 +89,12 @@ class Trainer:
                 log(f"[trainer] step {step}: non-finite update SKIPPED "
                     f"(rejected by {self.opt.name})")
 
+            # swap hook: optimizers running asynchronous side computations
+            # (K-FAC refresh_mode="overlap") commit any finished buffer
+            # here without blocking the step loop
+            if self.opt.poll is not None:
+                state = self.opt.poll(state)
+
             history.append({k: float(v) for k, v in metrics.items()
                             if jnp.ndim(v) == 0})
             if step % self.tc.log_every == 0:

@@ -43,7 +43,8 @@ GOLDEN = {
 REL_BAND = 0.07
 
 
-def golden_run(inv_mode: str, steps: int = STEPS):
+def golden_run(inv_mode: str, steps: int = STEPS,
+               refresh_mode: str = "serial", return_history: bool = False):
     """The pinned setup: reduced autoencoder (64-32-16-8 mirrored), sparse
     paper init, full-batch synthetic data, eigh inverses, T3=5 refresh,
     driven end-to-end by the real Trainer."""
@@ -52,11 +53,17 @@ def golden_run(inv_mode: str, steps: int = STEPS):
     params = mlp.init_params(jax.random.PRNGKey(0), sparse=True)
     data = SyntheticAutoencoderData(dims[0], 8, 256, seed=7)
     cfg = KFACConfig(inv_mode=inv_mode, inverse_method="eigh",
-                     lambda_init=3.0, t3=5, eta=1e-5)
+                     lambda_init=3.0, t3=5, eta=1e-5,
+                     refresh_mode=refresh_mode,
+                     # golden runs must be wall-clock independent: overlap
+                     # commits exactly at due steps, not on is_ready races
+                     overlap_deterministic=True)
     opt = optimizers.kfac(mlp, cfg, family="bernoulli")
     tr = Trainer(mlp, opt, TrainConfig(steps=steps, seed=0, log_every=10_000),
                  None, None)
     out = tr.fit(params, data, steps=steps, log=lambda *_: None)
+    if return_history:
+        return out["history"]
     return [h["loss"] for h in out["history"]]
 
 
@@ -77,6 +84,54 @@ def test_golden_trajectory(inv_mode):
     # trajectory shape, not just endpoints: sustained descent
     assert losses[-1] < 0.35 * losses[0], (losses[0], losses[-1])
     assert all(b < a * 1.05 for a, b in zip(got, got[1:])), got
+
+
+# ---------------------------------------------------------------------------
+# distributed refresh service (repro.distributed): the sharded refresh is
+# bitwise-identical to serial, so it shares GOLDEN; the async overlap mode
+# steps on pipelined (stale-by-design) inverses and gets its own envelope,
+# plus the bounded-staleness contract (counter never exceeds T3).  The
+# pinned run uses overlap_deterministic=True (swap exactly at due steps),
+# so the trajectory is schedule-only — no is_ready wall-clock races.
+# ---------------------------------------------------------------------------
+
+GOLDEN_OVERLAP = (93.1689, 42.4726, 36.9508, 32.7847, 29.5379, 27.4448)
+
+
+@pytest.mark.slow
+def test_sharded_refresh_matches_serial_golden():
+    """refresh_mode="sharded" must land on the *serial* golden trajectory:
+    the block-parallel refresh is an executor change, not a numerics one."""
+    losses = golden_run("blkdiag", refresh_mode="sharded")
+    want = GOLDEN["blkdiag"]
+    got = [losses[i] for i in CHECKPOINTS]
+    for step, w, g in zip(CHECKPOINTS, want, got):
+        assert abs(g - w) <= REL_BAND * w, (
+            f"sharded: step {step} loss {g:.4f} deviates from the serial "
+            f"golden {w:.4f} — the sharded refresh must not change numerics")
+
+
+@pytest.mark.slow
+def test_overlap_golden_trajectory():
+    """50 Trainer.fit steps in refresh_mode="overlap": the double-buffered
+    async refresh descends inside its own envelope and the staleness
+    counter stays within the T3 bound throughout."""
+    hist = golden_run("blkdiag", refresh_mode="overlap",
+                      return_history=True)
+    losses = [h["loss"] for h in hist]
+    assert len(losses) == STEPS
+    assert np.isfinite(losses).all(), losses
+    got = [losses[i] for i in CHECKPOINTS]
+    for step, w, g in zip(CHECKPOINTS, GOLDEN_OVERLAP, got):
+        assert abs(g - w) <= REL_BAND * w, (
+            f"overlap: step {step} loss {g:.4f} outside "
+            f"[{w * (1 - REL_BAND):.4f}, {w * (1 + REL_BAND):.4f}] "
+            f"(golden {w:.4f}) — regenerate GOLDEN_OVERLAP only for an "
+            f"intentional optimizer/scheduling change")
+    assert losses[-1] < 0.35 * losses[0], (losses[0], losses[-1])
+    # bounded staleness: the controller force-swaps at the T3 ceiling
+    stale = [h.get("staleness", 0.0) for h in hist]
+    assert max(stale) <= 5, stale          # T3 = 5 in the pinned setup
 
 
 # ---------------------------------------------------------------------------
@@ -143,6 +198,9 @@ if __name__ == "__main__":
         ls = golden_run(mode)
         pts = ", ".join(f"{ls[i]:.4f}" for i in CHECKPOINTS)
         print(f'    "{mode}": ({pts}),')
+    ls = golden_run("blkdiag", refresh_mode="overlap")
+    pts = ", ".join(f"{ls[i]:.4f}" for i in CHECKPOINTS)
+    print(f'    GOLDEN_OVERLAP = ({pts})')
     for mode in sorted(GOLDEN_CONV):
         ls = conv_golden_run(mode)
         pts = ", ".join(f"{ls[i]:.4f}" for i in CHECKPOINTS)

@@ -259,3 +259,48 @@ def test_eigen_rescale_fixed_point(seed, da, dg, eps):
     out2 = INV.eigen_rescale(meta, eig, g_other, eps)
     np.testing.assert_allclose(out2["s"], eps * eig["s"] + (1 - eps) * t ** 2,
                                rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# distributed refresh plan (repro.distributed.plan)
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(min_value=1.0, max_value=1e6), min_size=1,
+                max_size=64),
+       st.integers(min_value=1, max_value=8))
+def test_refresh_plan_balance_bounded(costs, n_bins):
+    """LPT bin-packing invariant: every block assigned exactly once, and
+    no shard exceeds the lightest shard by more than one block's cost —
+    so the max/min device cost ratio is bounded by
+    (min + max_item) / min whenever every shard is loaded."""
+    from repro.distributed.plan import RefreshPlan, bin_pack
+
+    named = {f"b{i}": c for i, c in enumerate(costs)}
+    owners = bin_pack(named, n_bins)
+    assert sorted(owners) == sorted(named)          # full coverage, no dups
+    assert all(0 <= b < n_bins for b in owners.values())
+
+    plan = RefreshPlan(n_shards=n_bins, owners=owners, costs=named)
+    loads = plan.shard_costs()
+    assert max(loads) - max(named.values()) <= min(loads) + 1e-6 * max(loads)
+    # critical path never exceeds the serial cost, and with at least as
+    # many blocks as bins every bin is loaded and the ratio bound holds
+    assert plan.parallel_cost() <= plan.serial_cost() + 1e-6
+    if len(named) >= n_bins:
+        loaded = [c for c in loads if c > 0]
+        assert len(loaded) == n_bins
+        assert plan.balance_ratio() <= \
+            (min(loaded) + max(named.values())) / min(loaded) + 1e-6
+
+
+@given(st.lists(st.floats(min_value=1.0, max_value=1e6), min_size=1,
+                max_size=32),
+       st.integers(min_value=1, max_value=8))
+def test_refresh_plan_deterministic(costs, n_bins):
+    """The plan is a pure function of (costs, n_bins) — insertion order of
+    the cost mapping must not matter (devices must agree on ownership)."""
+    from repro.distributed.plan import bin_pack
+
+    named = {f"b{i}": c for i, c in enumerate(costs)}
+    rev = dict(reversed(list(named.items())))
+    assert bin_pack(named, n_bins) == bin_pack(rev, n_bins)

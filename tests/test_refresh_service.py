@@ -1,0 +1,244 @@
+"""Distributed curvature service (repro.distributed): plan, sharded
+refresh, async overlap — 1-device tier-1 coverage.
+
+The numerics contract is pinned here on one device (sharded refresh ==
+serial refresh, bitwise, for every inv_mode) and re-pinned on a forced
+8-device CPU mesh by ``tests/test_distributed_numerics.py``; the plan's
+balance guarantee gets a hypothesis property test in
+``tests/test_property.py``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optimizers
+from repro.configs.base import KFACConfig
+from repro.data.pipeline import SyntheticAutoencoderData
+from repro.distributed import (CHAIN, OverlapController, bin_pack,
+                               block_cost, build_plan,
+                               build_sharded_refresh)
+from repro.models.mlp import MLP
+
+
+def _problem(dims=(32, 16, 8, 16, 32), n=256):
+    mlp = MLP(list(dims), nonlin="tanh", loss="bernoulli")
+    params = mlp.init_params(jax.random.PRNGKey(0), sparse=False)
+    data = SyntheticAutoencoderData(dims[0], 6, n, seed=7)
+    return mlp, params, data
+
+
+def _run(cfg, steps=10, poll=True):
+    mlp, params, data = _problem()
+    opt = optimizers.kfac(mlp, cfg, family="bernoulli")
+    state = opt.init(params, data.batch(0))
+    history = []
+    for step in range(steps):
+        batch = data.batch(step)
+        rng = jax.random.fold_in(jax.random.PRNGKey(0), step)
+        params, state, metrics = opt.update(None, state, params, batch, rng)
+        if poll and opt.poll is not None:
+            state = opt.poll(state)
+        history.append({k: float(v) for k, v in metrics.items()
+                        if jnp.ndim(v) == 0})
+    return params, state, history
+
+
+def _assert_trees_equal(a, b, err=""):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(x, y, err_msg=err), a, b)
+
+
+# ---------------------------------------------------------------------------
+# sharded refresh == serial refresh, bitwise (1 device; the 8-device
+# re-pin lives in test_distributed_numerics.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("inv_mode", ["blkdiag", "eigen", "tridiag"])
+def test_sharded_refresh_matches_serial_bitwise(inv_mode):
+    """10 steps covering warmup refreshes, a T3 refresh and a T2 gamma
+    sweep: params AND inverses must agree bit-for-bit across refresh
+    executors — the sharded path computes each block with the identical
+    per-block math and only psum-adds exact zeros."""
+    cfg = KFACConfig(inv_mode=inv_mode, inverse_method="eigh",
+                     lambda_init=1.0, t1=5, t2=4, t3=5, eta=1e-5)
+    p_serial, s_serial, _ = _run(cfg)
+    p_shard, s_shard, _ = _run(cfg.replace(refresh_mode="sharded"))
+    _assert_trees_equal(p_serial, p_shard, err=f"params ({inv_mode})")
+    _assert_trees_equal(s_serial.inv, s_shard.inv, err=f"inv ({inv_mode})")
+    np.testing.assert_array_equal(s_serial.lam, s_shard.lam)
+
+
+def test_sharded_refresh_matches_serial_ns_hot_start():
+    """The Newton–Schulz hot start consumes the previous inverses; the
+    sharded refresh must thread them through identically."""
+    cfg = KFACConfig(inv_mode="blkdiag", inverse_method="ns",
+                     lambda_init=1.0, t1=5, t2=0, t3=3, eta=1e-5)
+    p_serial, s_serial, _ = _run(cfg, steps=8)
+    p_shard, s_shard, _ = _run(cfg.replace(refresh_mode="sharded"), steps=8)
+    _assert_trees_equal(p_serial, p_shard)
+    _assert_trees_equal(s_serial.inv, s_shard.inv)
+
+
+def test_refresh_fn_output_matches_engine_stage():
+    """build_sharded_refresh is the engine's refresh_inverses, relocated:
+    same inv pytree from the same state."""
+    mlp, params, data = _problem()
+    cfg = KFACConfig(inv_mode="blkdiag", inverse_method="eigh",
+                     lambda_init=1.0)
+    opt = optimizers.kfac(mlp, cfg, family="bernoulli")
+    state = opt.init(params, data.batch(0))
+    state, grads, _ = opt.engine.stats_grads(state, params, data.batch(0),
+                                             jax.random.PRNGKey(1))
+    want = opt.engine.refresh_inverses(state).inv
+    fn = build_sharded_refresh(opt.engine)
+    got = fn(state.factors, state.gamma, state.inv)
+    _assert_trees_equal(want, got)
+
+
+# ---------------------------------------------------------------------------
+# overlap mode
+# ---------------------------------------------------------------------------
+
+def test_overlap_mode_trains_with_bounded_staleness():
+    cfg = KFACConfig(inv_mode="blkdiag", inverse_method="eigh",
+                     lambda_init=1.0, t1=5, t2=8, t3=3, eta=1e-5,
+                     refresh_mode="overlap")
+    params, state, history = _run(cfg, steps=12)
+    losses = [h["loss"] for h in history]
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
+    # the staleness counter is bounded by T3 (forced swap at the ceiling)
+    stale = [h.get("staleness", 0.0) for h in history]
+    assert max(stale) <= cfg.t3, stale
+    assert int(state.staleness) <= cfg.t3
+    # the double buffer exists and, once committed, mirrors the live invs
+    assert state.inv_pending is not None
+    _assert_trees_equal(state.inv, state.inv_pending)
+
+
+def test_overlap_state_slots_absent_in_sync_modes():
+    """Serial/staggered/sharded states carry no pending buffer (None) —
+    overlap's double buffer is paid for only when asked for."""
+    mlp, params, data = _problem(dims=(16, 8, 16), n=64)
+    for mode in ("serial", "staggered", "sharded"):
+        opt = optimizers.kfac(mlp, KFACConfig(lambda_init=1.0,
+                                              refresh_mode=mode),
+                              family="bernoulli")
+        state = opt.init(params, data.batch(0))
+        assert state.inv_pending is None, mode
+        assert int(state.staleness) == 0, mode
+    opt = optimizers.kfac(mlp, KFACConfig(lambda_init=1.0,
+                                          refresh_mode="overlap"),
+                          family="bernoulli")
+    assert opt.init(params, data.batch(0)).inv_pending is not None
+
+
+def test_overlap_controller_forced_commit_at_bound():
+    """A pending buffer that never reports ready is force-committed when
+    the staleness counter hits the bound (and at the next due step)."""
+
+    class _Stuck:
+        """Array stand-in that is never 'ready' until blocked on."""
+
+        def __init__(self, v):
+            self.v = v
+
+        def is_ready(self):
+            return False
+
+    @dataclasses.dataclass(frozen=True)
+    class MiniState:
+        factors: object
+        gamma: object
+        inv: object
+        inv_pending: object
+        staleness: object
+
+        def replace(self, **kw):
+            return dataclasses.replace(self, **kw)
+
+    calls = []
+
+    def fake_refresh(factors, gamma, prev):
+        calls.append(True)
+        return {"w": _Stuck(len(calls))}
+
+    ctl = OverlapController(fake_refresh, bound=3)
+    state = MiniState(factors={}, gamma=1.0, inv={"w": 0},
+                      inv_pending={"w": 0}, staleness=jnp.int32(0))
+    state = ctl.on_refresh_stage(state, step=3, due=True)     # dispatch
+    assert ctl.pending is not None and len(calls) == 1
+    state = ctl.on_refresh_stage(state, step=4, due=False)
+    state = ctl.on_refresh_stage(state, step=5, due=False)
+    assert int(state.staleness) == 2 and ctl.pending is not None
+    state = ctl.on_refresh_stage(state, step=6, due=True)     # forced
+    assert int(state.staleness) == 0
+    assert state.inv["w"].v == 1                              # committed
+    assert len(calls) == 2                                    # re-dispatched
+    # poll never blocks: the new stuck buffer stays pending
+    state = ctl.poll(state)
+    assert ctl.pending is not None and state.inv["w"].v == 1
+
+
+def test_unknown_refresh_mode_rejected():
+    mlp, _, _ = _problem(dims=(16, 8, 16), n=64)
+    with pytest.raises(ValueError, match="refresh_mode"):
+        optimizers.kfac(mlp, KFACConfig(refresh_mode="warp"),
+                        family="bernoulli")
+
+
+# ---------------------------------------------------------------------------
+# the plan
+# ---------------------------------------------------------------------------
+
+def test_bin_pack_covers_and_balances():
+    costs = {f"b{i}": float(c) for i, c in
+             enumerate([100, 90, 80, 10, 10, 10, 5, 5])}
+    owners = bin_pack(costs, 3)
+    assert set(owners) == set(costs)
+    assert set(owners.values()) <= {0, 1, 2}
+    loads = [0.0] * 3
+    for n, b in owners.items():
+        loads[b] += costs[n]
+    # LPT guarantee: no bin exceeds the lightest by more than one item
+    assert max(loads) - max(costs.values()) <= min(loads) + 1e-9
+    # deterministic
+    assert owners == bin_pack(dict(reversed(list(costs.items()))), 3)
+
+
+def test_block_cost_model_shapes():
+    @dataclasses.dataclass
+    class Meta:
+        a_dim: int = 64
+        g_dim: int = 32
+        a_kind: str = "full"
+        g_kind: str = "full"
+        a_blocks: int = 1
+        g_blocks: int = 1
+        n_stack: int = 0
+        n_expert: int = 0
+
+    assert block_cost(Meta()) == 64 ** 3 + 32 ** 3
+    assert block_cost(Meta(a_kind="diag")) == 64 + 32 ** 3
+    assert block_cost(Meta(g_kind="block", g_blocks=4)) == \
+        64 ** 3 + 4 * 8 ** 3
+    assert block_cost(Meta(n_stack=3)) == 3 * (64 ** 3 + 32 ** 3)
+
+
+def test_build_plan_and_stagger_groups_partition_blocks():
+    mlp, _, _ = _problem()
+    cfg = KFACConfig(lambda_init=1.0, t3=3)
+    eng = optimizers.kfac(mlp, cfg, family="bernoulli").engine
+    plan = build_plan(eng.blocks, 4)
+    assert sorted(plan.owners) == sorted(eng.blocks)
+    assert plan.parallel_cost() < plan.serial_cost()
+    # tridiag chain rides along as one more ownable unit
+    plan_c = build_plan(eng.blocks, 4, chain=True)
+    assert CHAIN in plan_c.owners
+    # the engine's staggered groups are the same planner, T3 bins
+    groups = eng.stagger_groups()
+    assert len(groups) == cfg.t3
+    assert sorted(n for g in groups for n in g) == sorted(eng.metas)

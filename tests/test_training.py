@@ -73,7 +73,7 @@ def test_checkpoint_dict_state_migration(tmp_path):
     # to simulate a genuinely old (schema-1, pre-version-field) checkpoint
     man_path = tmp_path / "step_00000003" / "manifest.json"
     man = _json.loads(man_path.read_text())
-    assert man["schema"] == 2
+    assert man["schema"] == 3
     del man["schema"]
     man_path.write_text(_json.dumps(man))
 
@@ -93,6 +93,111 @@ def test_checkpoint_dict_state_migration(tmp_path):
         assert False, "expected schema-version error"
     except ValueError as e:
         assert "schema" in str(e)
+
+
+def test_checkpoint_v2_state_migration(tmp_path):
+    """Schema 2 -> 3: pre-distributed-refresh checkpoints lack the
+    ``staleness`` / ``inv_pending`` state leaves; restoring one into a v3
+    template must keep the template's fresh-init values for exactly those
+    fields and the checkpointed values for everything else."""
+    import json as _json
+
+    import numpy as _np
+
+    from repro import optimizers
+    from repro.configs.base import KFACConfig as _KC
+
+    mlp = MLP([16, 8, 16], loss="bernoulli")
+    params = mlp.init_params(jax.random.PRNGKey(0), sparse=False)
+    data = SyntheticAutoencoderData(16, 4, 64, seed=1)
+    batch = data.batch(0)
+    opt = optimizers.kfac(mlp, _KC(lambda_init=1.0, refresh_mode="overlap"),
+                          family="bernoulli")
+    state = opt.init(params, batch)
+    params, state, _ = opt.update(None, state, params, batch,
+                                  jax.random.PRNGKey(1))
+    state = state.replace(staleness=jnp.int32(2))   # non-default, must NOT
+    #                                                 survive the migration
+
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(4, {"params": params, "state": state}, block=True)
+
+    # rewrite the checkpoint as a genuine v2: drop the v3-only leaves
+    step_dir = tmp_path / "step_00000004"
+    with np.load(step_dir / "arrays.npz") as z:
+        flat = {k: z[k] for k in z.files
+                if "staleness" not in k.split("::")
+                and "inv_pending" not in k.split("::")}
+    assert len(flat) < len(jax.tree.leaves(state)) + len(
+        jax.tree.leaves(params))
+    _np.savez(step_dir / "arrays.npz", **flat)
+    man = _json.loads((step_dir / "manifest.json").read_text())
+    man["schema"] = 2
+    (step_dir / "manifest.json").write_text(_json.dumps(man))
+
+    template = opt.init(params, batch)
+    step, got = ck.restore({"params": params, "state": template})
+    assert step == 4
+    # v3 fields fall back to the template (fresh-init) values ...
+    assert int(got["state"].staleness) == 0
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(a, b),
+        got["state"].inv_pending, template.inv_pending)
+    # ... while the checkpointed fields restore verbatim
+    np.testing.assert_array_equal(got["state"].lam, state.lam)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(a, b),
+        got["state"].factors, state.factors)
+
+    # a v3 checkpoint missing a NON-migration leaf must still hard-fail
+    with np.load(step_dir / "arrays.npz") as z:
+        flat = {k: z[k] for k in z.files if "::lam" not in k}
+    _np.savez(step_dir / "arrays.npz", **flat)
+    try:
+        ck.restore({"params": params, "state": template})
+        assert False, "expected missing-leaf error"
+    except KeyError as e:
+        assert "lam" in str(e)
+
+
+def test_checkpoint_refresh_mode_switch(tmp_path):
+    """A schema-3 checkpoint written by a sync-mode run has no
+    ``inv_pending`` leaves (the slot is None outside overlap).  Relaunching
+    the same checkpoint dir with refresh_mode="overlap" — the natural
+    adoption path — must restore, seeding the double buffer from the
+    overlap template instead of KeyError-ing on the missing leaves."""
+    from repro import optimizers
+    from repro.configs.base import KFACConfig as _KC
+
+    mlp = MLP([16, 8, 16], loss="bernoulli")
+    params = mlp.init_params(jax.random.PRNGKey(0), sparse=False)
+    data = SyntheticAutoencoderData(16, 4, 64, seed=1)
+    batch = data.batch(0)
+
+    serial = optimizers.kfac(mlp, _KC(lambda_init=1.0), family="bernoulli")
+    state = serial.init(params, batch)
+    params2, state, _ = serial.update(None, state, params, batch,
+                                      jax.random.PRNGKey(1))
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(1, {"params": params2, "state": state}, block=True)
+
+    overlap = optimizers.kfac(mlp, _KC(lambda_init=1.0,
+                                       refresh_mode="overlap"),
+                              family="bernoulli")
+    template = overlap.init(params, batch)
+    step, got = ck.restore({"params": params, "state": template})
+    assert step == 1
+    np.testing.assert_array_equal(got["state"].lam, state.lam)
+    assert got["state"].inv_pending is not None
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(a, b),
+        got["state"].inv_pending, template.inv_pending)
+    # ... and the reverse direction (overlap ckpt -> sync template) just
+    # drops the extra inv_pending leaves
+    ck.save(2, {"params": params2, "state": got["state"]}, block=True)
+    step, back = ck.restore({"params": params,
+                             "state": serial.init(params, batch)})
+    assert step == 2 and back["state"].inv_pending is None
 
 
 def test_checkpoint_torn_write_ignored(tmp_path):
@@ -158,6 +263,34 @@ def test_serving_engine_completes():
     eng.run(reqs)
     assert all(r.done for r in reqs)
     assert all(len(r.out) == 4 for r in reqs)
+
+
+def test_serving_cache_zero_init():
+    """Serving KV-cache init contract: the engine used to materialize the
+    cache through the *weight* initializer with a hardcoded PRNGKey(0);
+    that was only zero because every cache ParamDef carries init="zeros" —
+    one cache leaf losing that flag would hand a fresh slot random garbage
+    in positions it attends before writing.  Pin the contract itself: the
+    cache is exactly zero at construction (now structural, RNG-free) for
+    every rng_seed, and greedy decode does not depend on rng_seed."""
+    cfg = get_reduced_config("smollm-135m")
+    lm = LM(cfg)
+    params = lm.init_params(jax.random.PRNGKey(0))
+
+    eng = Engine(lm, params, batch_slots=2, max_len=32, rng_seed=123)
+    for leaf in jax.tree.leaves(eng.cache):
+        assert float(jnp.abs(leaf).max()) == 0.0, leaf.shape
+
+    # behavioral pin: identical greedy outputs under different rng seeds
+    # (pre-fix, the init key was hardcoded — the cache contents could
+    # never follow rng_seed, so any seed-dependence here means leakage)
+    outs = []
+    for seed in (0, 123):
+        e = Engine(lm, params, batch_slots=2, max_len=32, rng_seed=seed)
+        reqs = [Request(uid=0, prompt=[3, 5, 7], max_new=4)]
+        e.run(reqs)
+        outs.append(tuple(reqs[0].out))
+    assert outs[0] == outs[1], outs
 
 
 def test_elastic_reshard_identity():
