@@ -1,14 +1,28 @@
 """Kernel microbenches (paper S8 cost model) through the *optimizer's own*
 entry points: a DenseKronecker curvature block's fused factor accumulation,
-two-sided preconditioning and EKFAC eigenbasis apply (`rotate_rescale`),
-under both `kernel_backend` settings, plus the per-step eigen diagonal
-re-estimation, the Newton–Schulz inverse and attention reference rows.
+two-sided preconditioning, fused update chain and EKFAC eigenbasis apply
+(`rotate_rescale`), under both `kernel_backend` settings, plus the per-step
+eigen diagonal re-estimation, the Newton–Schulz inverse and attention
+reference rows.
 
-On this CPU container the Pallas rows run in interpret mode, so their
-wall-clock is correctness-only; on TPU the same code paths compile.  What
+On this CPU container the Pallas rows run in interpret mode — labelled
+``pallas_interp`` (row name suffix and per-row ``backend`` field) so their
+correctness-only wall-clock is never confused with a compiled number; on
+TPU the same code paths compile and the suffix is plain ``pallas``.  What
 matters is that these are the identical `factor_update`/`precondition`
 routes `KFAC.stats_grads`/`KFAC.apply_update` execute with
 `kernel_backend="pallas"` — the numbers describe the real optimizer step.
+
+Every row carries per-row metadata (merged into its BENCH_kernels.json
+entry): ``backend`` (xla | pallas | pallas_interp), ``tuned`` (the
+autotuner's winning tile config when ``--autotune cache|force`` ran — the
+real-backend tuning mode; None otherwise), and a ``flops``/``bytes`` cost
+model that benchmarks/roofline.py turns into achieved-vs-peak fractions.
+
+CLI:  --quick      small shapes + few iters (CI bench-smoke)
+      --autotune M off | cache | force — tune on the live backend and
+                   record the chosen config per row
+      --check      schema-validate the emitted rows (benchlib.validate_rows)
 """
 from __future__ import annotations
 
@@ -33,15 +47,43 @@ def _time(f, *args, iters=5):
     return (time.time() - t0) / iters * 1e6
 
 
-def _dense_block(d_in, d_out, backend, inv_mode="blkdiag"):
+def _interp() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _label(backend: str) -> str:
+    """Row label: pallas rows on a non-TPU host run the interpreter."""
+    if backend == "pallas" and _interp():
+        return "pallas_interp"
+    return backend
+
+
+def _tuned_cfg(kernel, shape, dtype, autotune):
+    """The persisted autotuner winner for this row's problem (provenance
+    for the BENCH json), or None when tuning was off / nothing won."""
+    if autotune == "off":
+        return None
+    from repro.kernels.autotune import cached_entry
+    entry = cached_entry(kernel, tuple(int(s) for s in shape), dtype,
+                         interpret=_interp())
+    return None if entry is None else entry.get("cfg")
+
+
+def _meta(backend, flops, bytes_, tuned=None):
+    return {"backend": _label(backend), "tuned": tuned,
+            "flops": float(flops), "bytes": float(bytes_)}
+
+
+def _dense_block(d_in, d_out, backend, inv_mode="blkdiag", autotune="off"):
     meta = LayerMeta("bench", ("w",), d_in=d_in, d_out=d_out, kind="dense")
-    cfg = KFACConfig(kernel_backend=backend, inv_mode=inv_mode)
+    cfg = KFACConfig(kernel_backend=backend, inv_mode=inv_mode,
+                     autotune=autotune)
     return build_blocks({"bench": meta}, cfg)["bench"]
 
 
-def run(backends=("xla", "pallas"), iters=5):
+def run(backends=("xla", "pallas"), iters=5, quick=False, autotune="off"):
     rows = []
-    d, n = 512, 4096
+    d, n = (256, 1024) if quick else (512, 4096)
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (n, d), jnp.float32)
     cot = jax.random.normal(jax.random.fold_in(key, 1), (n, d)) / n
@@ -50,37 +92,68 @@ def run(backends=("xla", "pallas"), iters=5):
     v = jax.random.normal(jax.random.fold_in(key, 2), (d, d))
     a_inv = jnp.eye(d)
     g_inv = jnp.eye(d)
+    mom = jnp.zeros((d, d), jnp.float32)
     eig = {"qa": jnp.eye(d), "qg": jnp.eye(d),
            "s": jnp.ones((d, d)), "damp": jnp.zeros((d, d))}
 
     for backend in backends:
-        blk = _dense_block(d, d, backend)
+        lab = _label(backend)
+        blk = _dense_block(d, d, backend, autotune=autotune)
         # the S5 stats route KFAC.stats_grads runs: fused C <- eps C + a XtX
         f = jax.jit(lambda eps, b=blk: b.update_factors(
             old, rec, cot, {}, n, eps))
         us = _time(f, jnp.float32(0.95), iters=iters)
-        rows.append((f"factor_update_{d}_{backend}", us,
-                     2 * 2 * n * d * d / (us * 1e-6) / 1e9))
+        flops = 2 * 2 * n * d * d              # both sides' rank updates
+        bytes_ = 4 * (2 * n * d + 4 * d * d)   # x + cot in, old/new factors
+        rows.append((f"factor_update_{d}_{lab}", us,
+                     flops / (us * 1e-6) / 1e9,
+                     _meta(backend, flops, bytes_,
+                           _tuned_cfg("factor_update", (n, d), jnp.float32,
+                                      autotune))))
 
         # the S4.2 apply route KFAC.apply_update runs: U = A^-1 V G^-1
         g = jax.jit(lambda vv, b=blk: b.precondition(
             {"a_inv": a_inv, "g_inv": g_inv}, vv))
         us = _time(g, v, iters=iters)
-        rows.append((f"precondition_{d}_{backend}", us,
-                     2 * 2 * d ** 3 / (us * 1e-6) / 1e9))
+        flops = 2 * 2 * d ** 3
+        bytes_ = 4 * 4 * d * d                 # a_inv, g_inv, v in; u out
+        rows.append((f"precondition_{d}_{lab}", us,
+                     flops / (us * 1e-6) / 1e9,
+                     _meta(backend, flops, bytes_,
+                           _tuned_cfg("precond", (d, d), jnp.float32,
+                                      autotune))))
+
+        # the fused fixed-lr chain (use_rescale=False):
+        # D = alpha (A^-1 V G^-1) + mu M, plus ||D||^2 out of the same pass
+        uc = jax.jit(lambda vv, b=blk: b.precond_momentum(
+            {"a_inv": a_inv, "g_inv": g_inv}, vv, mom,
+            jnp.float32(-0.05), jnp.float32(0.9))[0])
+        us = _time(uc, v, iters=iters)
+        flops = 2 * 2 * d ** 3 + 3 * d * d
+        bytes_ = 4 * 5 * d * d                 # + momentum in
+        rows.append((f"update_chain_{d}_{lab}", us,
+                     flops / (us * 1e-6) / 1e9,
+                     _meta(backend, flops, bytes_,
+                           _tuned_cfg("update_chain", (d, d), jnp.float32,
+                                      autotune))))
 
         # the eigen-mode apply route: U = Q_A[(Q_Aᵀ V Q_G)/(s+damp)]Q_Gᵀ
-        eb = _dense_block(d, d, backend, inv_mode="eigen")
+        eb = _dense_block(d, d, backend, inv_mode="eigen", autotune=autotune)
         r = jax.jit(lambda vv, b=eb: b.precondition_eigen(eig, vv))
         us = _time(r, v, iters=iters)
-        rows.append((f"rotate_rescale_{d}_{backend}", us,
-                     4 * 2 * d ** 3 / (us * 1e-6) / 1e9))
+        flops = 4 * 2 * d ** 3
+        bytes_ = 4 * 6 * d * d
+        rows.append((f"rotate_rescale_{d}_{lab}", us,
+                     flops / (us * 1e-6) / 1e9,
+                     _meta(backend, flops, bytes_,
+                           _tuned_cfg("rotate_rescale", (d, d), jnp.float32,
+                                      autotune))))
 
     # the KFC conv stats route (1602.01407): fused im2col + patch-factor
     # accumulation straight from the raw input — the whisper conv1 shape
     # family, through ConvKronecker.update_factors on both backends
     from repro.models.conv import conv_meta
-    cb, ct, cc = 4, 1024, 128
+    cb, ct, cc = (2, 256, 64) if quick else (4, 1024, 128)
     cm = conv_meta("bench_conv", ("w",), spatial=(3,), stride=(1,),
                    c_in=cc, d_out=d, padding="SAME")
     cx = jax.random.normal(jax.random.fold_in(key, 3), (cb, ct, cc))
@@ -88,41 +161,77 @@ def run(backends=("xla", "pallas"), iters=5):
         cb * ct)
     cold = {"a": jnp.eye(cm.a_dim), "g": jnp.eye(d)}
     cflop = 2 * cb * ct * (cm.a_dim ** 2 + d ** 2)
+    cbytes = 4 * (cb * ct * (cc + d) + 2 * cm.a_dim ** 2 + 2 * d * d)
     for backend in backends:
-        cfg = KFACConfig(kernel_backend=backend)
+        cfg = KFACConfig(kernel_backend=backend, autotune=autotune)
         cblk = build_blocks({"c": cm}, cfg)["c"]
         f = jax.jit(lambda eps, b=cblk: b.update_factors(
             cold, {"cx": cx}, ccot, {}, cb * ct, eps))
         us = _time(f, jnp.float32(0.95), iters=iters)
-        rows.append((f"patch_factor_{cm.a_dim}_{backend}", us,
-                     cflop / (us * 1e-6) / 1e9))
+        rows.append((f"patch_factor_{cm.a_dim}_{_label(backend)}", us,
+                     cflop / (us * 1e-6) / 1e9,
+                     _meta(backend, cflop, cbytes,
+                           _tuned_cfg("patch_factor", (ct, cc, 3, 1),
+                                      jnp.float32, autotune))))
 
     # the per-step EKFAC diagonal re-estimation (rotate + square + blend);
     # an einsum path on every backend — one row, not one per backend
     eb = _dense_block(d, d, "xla", inv_mode="eigen")
     r2 = jax.jit(lambda vv, b=eb: b.rescale_step(eig, vv, jnp.float32(0.95)))
     us = _time(r2, v, iters=iters)
-    rows.append((f"eigen_rescale_{d}", us,
-                 2 * 2 * d ** 3 / (us * 1e-6) / 1e9))
+    flops = 2 * 2 * d ** 3
+    rows.append((f"eigen_rescale_{d}", us, flops / (us * 1e-6) / 1e9,
+                 _meta("xla", flops, 4 * 6 * d * d)))
 
     m = jax.random.normal(jax.random.PRNGKey(1), (d, d))
     m = m @ m.T / d + jnp.eye(d)
-    h = jax.jit(lambda m: ref.ns_inverse_ref(m, 12))
+    ns_it = 12
+    h = jax.jit(lambda m: ref.ns_inverse_ref(m, ns_it))
     us = _time(h, m, iters=iters)
-    rows.append(("ns_inverse_512x12", us,
-                 12 * 2 * 2 * d ** 3 / (us * 1e-6) / 1e9))
+    flops = ns_it * 2 * 2 * d ** 3
+    rows.append((f"ns_inverse_{d}x{ns_it}", us, flops / (us * 1e-6) / 1e9,
+                 _meta("xla", flops, 4 * 2 * d * d * ns_it)))
 
-    b, hq, hkv, t, hd = 1, 8, 2, 1024, 64
+    b, hq, hkv, t, hd = 1, 8, 2, (256 if quick else 1024), 64
     q = jax.random.normal(jax.random.PRNGKey(3), (b, hq, t, hd), jnp.float32)
     k = jax.random.normal(jax.random.PRNGKey(4), (b, hkv, t, hd), jnp.float32)
     vv = jax.random.normal(jax.random.PRNGKey(5), (b, hkv, t, hd), jnp.float32)
     fa = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
     us = _time(fa, q, k, vv, iters=iters)
-    rows.append(("attention_ref_1k", us,
-                 4 * b * hq * t * t * hd / (us * 1e-6) / 1e9))
+    flops = 4 * b * hq * t * t * hd
+    rows.append((f"attention_ref_{t // 1024 or t}{'k' if t >= 1024 else ''}",
+                 us, flops / (us * 1e-6) / 1e9,
+                 _meta("xla", flops, 4 * (hq + 2 * hkv) * b * t * hd)))
     return rows
 
 
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes + 2 iters (CI bench-smoke)")
+    ap.add_argument("--autotune", choices=("off", "cache", "force"),
+                    default="off",
+                    help="tune tile configs on the live backend and record "
+                         "the winner per row")
+    ap.add_argument("--check", action="store_true",
+                    help="schema-validate the rows (benchlib.validate_rows)")
+    args = ap.parse_args(argv)
+    rows = run(iters=2 if args.quick else 5, quick=args.quick,
+               autotune=args.autotune)
+    for row in rows:
+        tuned = row[3].get("tuned")
+        print(f"{row[0]},{row[1]:.0f},{row[2]:.2f}"
+              + (f",{tuned}" if tuned else ""))
+    if args.check:
+        try:
+            from benchmarks import benchlib
+        except ImportError:
+            import benchlib
+        benchlib.validate_rows(benchlib.build_payload("kernels", rows))
+        print(f"schema OK ({len(rows)} rows)")
+    return 0
+
+
 if __name__ == "__main__":
-    for name, us, gf in run():
-        print(f"{name},{us:.0f},{gf:.2f}")
+    raise SystemExit(main())

@@ -32,6 +32,7 @@ not backends against each other.
 from __future__ import annotations
 
 import json
+import math
 
 import jax
 
@@ -43,21 +44,55 @@ from repro.models.mlp import MLP
 DIMS = [64, 48, 24, 12, 24, 48, 64]
 
 
-def emit_json(path, suite: str, rows, extras=None) -> None:
-    """Write one suite's rows as the BENCH_*.json documented above.
+def build_payload(suite: str, rows, extras=None) -> dict:
+    """The BENCH_*.json payload for one suite's rows.
 
+    Rows are ``(name, us, derived)`` or ``(name, us, derived, meta)`` tuples;
+    ``meta`` is a per-row dict merged into the row (the kernels suite carries
+    ``backend`` / ``tuned`` / ``flops`` / ``bytes`` provenance this way).
     ``extras``: optional ``(name, us, derived) -> dict`` adding suite-
     specific per-row fields (see the schema note in the module docstring).
     """
-    payload = {
-        "suite": suite,
-        "backend": jax.default_backend(),
-        "rows": [{"name": n, "us_per_call": float(us), "derived": float(dv),
-                  **(extras(n, us, dv) if extras else {})}
-                 for n, us, dv in rows],
-    }
+    out_rows = []
+    for row in rows:
+        n, us, dv = row[0], row[1], row[2]
+        meta = row[3] if len(row) > 3 and row[3] else {}
+        out_rows.append({"name": n, "us_per_call": float(us),
+                         "derived": float(dv), **meta,
+                         **(extras(n, us, dv) if extras else {})})
+    return {"suite": suite, "backend": jax.default_backend(),
+            "rows": out_rows}
+
+
+def validate_rows(payload: dict) -> dict:
+    """Schema check for a BENCH_*.json payload (CI bench-smoke): raises
+    ValueError on any malformed row, returns the payload unchanged."""
+    if not isinstance(payload, dict):
+        raise ValueError(f"payload is {type(payload).__name__}, not dict")
+    for field in ("suite", "backend", "rows"):
+        if field not in payload:
+            raise ValueError(f"payload missing {field!r}")
+    if not isinstance(payload["rows"], list) or not payload["rows"]:
+        raise ValueError("payload rows must be a non-empty list")
+    for i, row in enumerate(payload["rows"]):
+        if not isinstance(row, dict):
+            raise ValueError(f"row {i} is not a dict")
+        if not isinstance(row.get("name"), str) or not row["name"]:
+            raise ValueError(f"row {i} has no name")
+        for field in ("us_per_call", "derived"):
+            v = row.get(field)
+            if not isinstance(v, (int, float)) or not math.isfinite(v):
+                raise ValueError(
+                    f"row {row['name']!r}: {field} = {v!r} is not finite")
+        if row["us_per_call"] < 0:
+            raise ValueError(f"row {row['name']!r}: negative us_per_call")
+    return payload
+
+
+def emit_json(path, suite: str, rows, extras=None) -> None:
+    """Write one suite's rows as the BENCH_*.json documented above."""
     with open(path, "w") as f:
-        json.dump(payload, f, indent=1)
+        json.dump(build_payload(suite, rows, extras), f, indent=1)
         f.write("\n")
 
 

@@ -142,6 +142,60 @@ def markdown(rows):
     return "\n".join(out)
 
 
+def kernel_rows(path=None):
+    """Per-kernel achieved-vs-peak roofline from BENCH_kernels.json.
+
+    Every measured kernel row carries its own ``flops``/``bytes`` cost model
+    (benchmarks/bench_kernels.py); achieved FLOP/s and B/s over the measured
+    wall-clock give the fractions of the TPU peaks.  Interpreter-mode rows
+    (``backend == "pallas_interp"``) are reported with null fractions — the
+    interpreter's wall-clock is correctness-only, and a fraction of the TPU
+    peak computed from it would be noise dressed as data."""
+    path = Path(path) if path else (
+        Path(__file__).resolve().parent.parent / "BENCH_kernels.json")
+    if not path.exists():
+        return []
+    payload = json.loads(path.read_text())
+    out = []
+    for row in payload.get("rows", ()):
+        if "flops" not in row or "bytes" not in row:
+            continue
+        us = row["us_per_call"]
+        if us <= 0:
+            continue
+        interp = row.get("backend") == "pallas_interp"
+        achieved_fs = row["flops"] / (us * 1e-6)
+        achieved_bs = row["bytes"] / (us * 1e-6)
+        out.append({
+            "name": row["name"],
+            "backend": row.get("backend"),
+            "tuned": row.get("tuned"),
+            "achieved_flops_s": achieved_fs,
+            "achieved_bytes_s": achieved_bs,
+            "flop_fraction": None if interp else achieved_fs / PEAK_FLOPS,
+            "bw_fraction": None if interp else achieved_bs / HBM_BW,
+            "arithmetic_intensity": row["flops"] / max(row["bytes"], 1.0),
+        })
+    return out
+
+
+def kernel_markdown(krows):
+    hdr = ("| kernel | backend | tuned | GFLOP/s | GB/s | peak FLOP frac | "
+           "peak BW frac | FLOP/byte |")
+    out = [hdr, "|" + "---|" * 8]
+    for r in krows:
+        ff = "interp" if r["flop_fraction"] is None else \
+            f"{r['flop_fraction']:.4f}"
+        bf = "interp" if r["bw_fraction"] is None else \
+            f"{r['bw_fraction']:.4f}"
+        out.append(
+            f"| {r['name']} | {r['backend']} | {r['tuned'] or '—'} | "
+            f"{r['achieved_flops_s'] / 1e9:.2f} | "
+            f"{r['achieved_bytes_s'] / 1e9:.2f} | {ff} | {bf} | "
+            f"{r['arithmetic_intensity']:.1f} |")
+    return "\n".join(out)
+
+
 def run():
     rows = build_table()
     ok = [r for r in rows if r["status"] == "ok"]
@@ -149,14 +203,25 @@ def run():
     for r in ok:
         out.append((f"roofline_{r['arch']}_{r['shape']}_frac", 0.0,
                     r["roofline_fraction"]))
+    krows = kernel_rows()
+    out.append(("roofline_kernel_rows", 0.0, float(len(krows))))
+    for r in krows:
+        # compiled rows report the peak-FLOP fraction; interpreter rows the
+        # (backend-agnostic) arithmetic intensity so the row still lands
+        out.append((f"roofline_kernel_{r['name']}", 0.0,
+                    r["flop_fraction"] if r["flop_fraction"] is not None
+                    else r["arithmetic_intensity"]))
     RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / "roofline.md").write_text(markdown(rows))
-    (RESULTS / "roofline.json").write_text(json.dumps(rows, indent=1))
+    md = markdown(rows)
+    if krows:
+        md += "\n\n## Kernel roofline (BENCH_kernels.json)\n\n" \
+            + kernel_markdown(krows)
+    (RESULTS / "roofline.md").write_text(md)
+    (RESULTS / "roofline.json").write_text(
+        json.dumps({"cells": rows, "kernels": krows}, indent=1))
     return out
 
 
 if __name__ == "__main__":
-    rows = build_table()
-    print(markdown(rows))
-    (RESULTS / "roofline.md").write_text(markdown(rows))
-    (RESULTS / "roofline.json").write_text(json.dumps(rows, indent=1))
+    run()
+    print((RESULTS / "roofline.md").read_text())

@@ -155,6 +155,24 @@ class KFACConfig:
                                       # factor_update / precondition through
                                       # the Pallas kernels (ragged shapes
                                       # fall back to the einsum path)
+    autotune: str = "off"             # off | cache | force: per-(kernel,
+                                      # shape, dtype, backend) tile-size
+                                      # autotuning for the Pallas kernels
+                                      # (repro.kernels.autotune; "off" is
+                                      # bitwise-identical to the untuned
+                                      # path; REPRO_AUTOTUNE overrides)
+    fused_stats: bool = False         # fold the factor statistics into the
+                                      # stats pass itself: A contracted
+                                      # in-forward, G via a custom-VJP
+                                      # contraction in the backward — one
+                                      # pass over activations/cotangents
+                                      # instead of two (docs/kernels.md;
+                                      # ignored under inv_mode="tridiag",
+                                      # which needs the raw records)
+    fixed_momentum: float = 0.0       # use_rescale=False only: heavy-ball
+                                      # mu for the fused update chain
+    clip_delta_norm: float = 0.0      # use_rescale=False only: global-norm
+                                      # clip of the applied update (0 = off)
     stats_period: int = 1             # update stats every N steps
     staggered_inverse: bool = False   # legacy alias for refresh_mode="staggered"
     refresh_mode: str = "serial"      # serial | staggered | sharded | overlap:

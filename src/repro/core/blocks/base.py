@@ -53,9 +53,20 @@ class CurvatureBlock(abc.ABC):
     def backend(self) -> str:
         return getattr(self.cfg, "kernel_backend", "xla")
 
+    @property
+    def autotune_mode(self) -> str:
+        return getattr(self.cfg, "autotune", "off")
+
     @staticmethod
     def _interpret() -> bool:
         return jax.default_backend() != "tpu"
+
+    def _tuned(self, kernel: str, shape, dtype) -> dict:
+        """Autotuned tile kwargs for ``kernel`` on this problem, or ``{}``
+        (kernel defaults) when tuning is off / no candidate is legal."""
+        from repro.kernels.autotune import tuned
+        return tuned(kernel, shape, dtype, interpret=self._interpret(),
+                     mode=self.autotune_mode) or {}
 
     # ------------------------------------------------------------------
     # layout
@@ -145,6 +156,16 @@ class CurvatureBlock(abc.ABC):
     def precondition(self, inv, v):
         """``U = Ā⁻¹ V G⁻¹`` with this block's structure; v shaped like W."""
         return INV.apply_block_inverse(self.meta, inv, v)
+
+    def precond_momentum(self, inv, v, mom, alpha, mu, eigen: bool = False):
+        """Fused update chain for the fixed-lr path (S4.2 + S7):
+        ``D = alpha·precondition(v) + mu·mom`` plus ``Σ D²`` — the squared
+        norm comes out of the same pass so the global-norm clip never
+        re-reads the update.  Subclasses may serve this with one kernel."""
+        u = (self.precondition_eigen(inv, v) if eigen
+             else self.precondition(inv, v))
+        d = alpha * u.astype(jnp.float32) + mu * mom
+        return d, jnp.sum(d * d)
 
     # ------------------------------------------------------------------
     # eigenbasis (EKFAC) path — George et al. 1806.03884

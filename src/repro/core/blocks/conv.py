@@ -29,10 +29,8 @@ inverses, the EKFAC eigen state + per-step ``rescale_step``, and the Pallas
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import factors as F
 from repro.core.blocks.base import register
 from repro.core.blocks.kron import DenseKronecker
 from repro.kernels.patch_factor import patch_factor_update
@@ -60,34 +58,34 @@ class ConvKronecker(DenseKronecker):
         return append_homog(p) if m.has_bias else p
 
     def stats_contrib(self, rec, gprobe, batch, n):
-        # dense-form record over the extracted patches; the shared
+        # dense-form record over the extracted patches; an already-contracted
+        # record (fused_stats, {"aa"}) passes straight through — the shared
         # KroneckerPair numerics handle every per-side factor kind
-        return super().stats_contrib({"a": self.patches(rec)}, gprobe,
-                                     batch, n)
+        dense_rec = rec if "aa" in rec else {"a": self.patches(rec)}
+        return super().stats_contrib(dense_rec, gprobe, batch, n)
 
     def update_factors(self, old, rec, gprobe, batch, n, eps):
         m = self.meta
         one = jnp.float32(1.0)
         a_new = None
         if (self.backend == "pallas" and not self.lead and m.a_kind == "full"
-                and m.g_kind == "full" and rec["cx"].ndim == 3):
+                and m.g_kind == "full" and "cx" in rec
+                and rec["cx"].ndim == 3):
             # 1-D conv: fused im2col + factor update straight from the raw
             # input — the im2col buffer never hits HBM (declines to None on
             # shapes that don't tile)
             a_new = patch_factor_update(rec["cx"], old["a"], m,
                                         (one - eps) / n, eps,
-                                        interpret=self._interpret())
+                                        interpret=self._interpret(),
+                                        autotune_mode=self.autotune_mode)
         if a_new is None:
-            # everything else is exactly the dense route over the extracted
-            # patches: 2-D patchifiers (their im2col is a reshape, no
-            # blowup) and ragged shapes fall back inside DenseKronecker
-            return super().update_factors(old, {"a": self.patches(rec)},
-                                          gprobe, batch, n, eps)
+            # everything else is exactly the dense route: pre-contracted
+            # fused records pass through, 2-D patchifiers (their im2col is a
+            # reshape, no blowup) and ragged shapes fall back inside
+            # DenseKronecker over the extracted patches
+            dense_rec = rec if "aa" in rec else {"a": self.patches(rec)}
+            return super().update_factors(old, dense_rec, gprobe, batch, n,
+                                          eps)
         # A fused; G identically to the dense route — cotangents of the
         # (1/N)-normalized sampled loss over every spatial location
-        cot = jax.lax.stop_gradient(gprobe)
-        g_new = self._pallas_side(cot, old["g"], (one - eps) * n, eps)
-        if g_new is None:
-            g_new = (eps * old["g"]
-                     + (one - eps) * F.g_from_cotangent(gprobe, m, n))
-        return {"a": a_new, "g": g_new}
+        return {"a": a_new, "g": self._g_side(old["g"], gprobe, n, eps)}

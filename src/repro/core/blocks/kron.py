@@ -27,6 +27,7 @@ from repro.kernels.compat import tile_ok
 from repro.kernels.factor_update import factor_update
 from repro.kernels.precond import precondition as precond_kernel
 from repro.kernels.rotate_rescale import rotate_rescale
+from repro.kernels.update_chain import precond_momentum as chain_kernel
 
 
 class KroneckerPair(CurvatureBlock):
@@ -34,12 +35,18 @@ class KroneckerPair(CurvatureBlock):
 
     def stats_contrib(self, rec, gprobe, batch, n):
         m = self.meta
-        if "aa" in rec:              # contracted in-forward (scan models)
-            a_c = rec["aa"] / n
+        if "aa" in rec:              # contracted in-forward (scan models /
+            a_c = rec["aa"] / n      # fused_stats)
         else:
             a_c = F.outer_sum(rec["a"], m.a_kind, m.a_blocks,
                               expert=m.kind == "expert") / n
-        g_c = F.g_from_cotangent(gprobe, m, n)
+        if isinstance(gprobe, dict):
+            # fused_stats: the backward already contracted Σ cot cotᵀ (see
+            # repro.core.fused.apply_gprobe); same N-scaling as
+            # g_from_cotangent
+            g_c = gprobe["gg"] * float(n)
+        else:
+            g_c = F.g_from_cotangent(gprobe, m, n)
         return {"a": a_c, "g": g_c}
 
 
@@ -82,8 +89,23 @@ class DenseKronecker(KroneckerPair):
         x2 = x.reshape(-1, x.shape[-1])
         if not tile_ok(*x2.shape):
             return None
+        cfg = self._tuned("factor_update", x2.shape, x2.dtype)
         return factor_update(x2, old, alpha=alpha, beta=eps,
-                             interpret=self._interpret())
+                             interpret=self._interpret(), **cfg)
+
+    def _g_side(self, old_g, gprobe, n, eps):
+        """G side of the decayed blend: cotangents of the (1/N)-normalized
+        sampled loss; per-token g = N·cot, so G = (1/N) Σ g gᵀ = N Σ cot cotᵀ.
+        A fused ``{"gg"}`` gprobe arrives pre-contracted by the backward."""
+        one = jnp.float32(1.0)
+        if isinstance(gprobe, dict):
+            return eps * old_g + (one - eps) * gprobe["gg"] * float(n)
+        cot = jax.lax.stop_gradient(gprobe)
+        g_new = self._pallas_side(cot, old_g, (one - eps) * n, eps)
+        if g_new is None:
+            g_new = (eps * old_g
+                     + (one - eps) * F.g_from_cotangent(gprobe, self.meta, n))
+        return g_new
 
     def update_factors(self, old, rec, gprobe, batch, n, eps):
         if self.backend != "pallas" or self.lead:
@@ -96,34 +118,44 @@ class DenseKronecker(KroneckerPair):
             a_c = (rec["aa"] / n if "aa" in rec else
                    F.outer_sum(rec["a"], "full", 1) / n)
             a_new = eps * old["a"] + (one - eps) * a_c
-        # G side: cotangents of the (1/N)-normalized sampled loss; per-token
-        # g = N·cot, so G = (1/N) Σ g gᵀ = N Σ cot cotᵀ
-        cot = jax.lax.stop_gradient(gprobe)
-        g_new = self._pallas_side(cot, old["g"], (one - eps) * n, eps)
-        if g_new is None:
-            g_new = (eps * old["g"]
-                     + (one - eps) * F.g_from_cotangent(gprobe, self.meta, n))
-        return {"a": a_new, "g": g_new}
+        return {"a": a_new, "g": self._g_side(old["g"], gprobe, n, eps)}
 
     # -- two-sided apply through the precond kernel ---------------------
     def precondition(self, inv, v):
         m = self.meta
         if (self.backend == "pallas" and tile_ok(m.a_dim, m.g_dim)
                 and v.shape[-2:] == (m.a_dim, m.g_dim)):
+            cfg = self._tuned("precond", (m.a_dim, m.g_dim), jnp.float32)
             fn = lambda a_i, vv, g_i: precond_kernel(
-                a_i, vv, g_i, interpret=self._interpret())
+                a_i, vv, g_i, interpret=self._interpret(), **cfg)
             for _ in range(v.ndim - 2):      # vmap over stack/expert dims
                 fn = jax.vmap(fn)
             return fn(inv["a_inv"], v.astype(jnp.float32), inv["g_inv"])
         return super().precondition(inv, v)
+
+    # -- fused fixed-lr update chain through the update_chain kernel ----
+    def precond_momentum(self, inv, v, mom, alpha, mu, eigen: bool = False):
+        m = self.meta
+        if (not eigen and self.backend == "pallas"
+                and tile_ok(m.a_dim, m.g_dim)
+                and v.shape == (m.a_dim, m.g_dim)):
+            cfg = self._tuned("update_chain", (m.a_dim, m.g_dim),
+                              jnp.float32)
+            return chain_kernel(inv["a_inv"], v.astype(jnp.float32),
+                                inv["g_inv"], mom, alpha=alpha, mu=mu,
+                                interpret=self._interpret(), **cfg)
+        return super().precond_momentum(inv, v, mom, alpha, mu, eigen)
 
     # -- eigenbasis apply through the rotate_rescale kernel -------------
     def precondition_eigen(self, eig, v):
         m = self.meta
         if (self.backend == "pallas" and tile_ok(m.a_dim, m.g_dim)
                 and v.shape[-2:] == (m.a_dim, m.g_dim)):
+            cfg = self._tuned("rotate_rescale", (m.a_dim, m.g_dim),
+                              jnp.float32)
             fn = lambda qa, vv, qg, sd: rotate_rescale(
-                qa, vv, qg, sd, lam=1e-12, interpret=self._interpret())
+                qa, vv, qg, sd, lam=1e-12, interpret=self._interpret(),
+                **cfg)
             for _ in range(v.ndim - 2):      # vmap over stack/expert dims
                 fn = jax.vmap(fn)
             return fn(eig["qa"], v.astype(jnp.float32), eig["qg"],

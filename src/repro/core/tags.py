@@ -69,7 +69,8 @@ class Tagger:
     """
 
     def __init__(self, mode: str = "plain", probes: Optional[Dict[str, Any]] = None,
-                 contract: Optional[Dict[str, Any]] = None):
+                 contract: Optional[Dict[str, Any]] = None,
+                 gcontract: Optional[Dict[str, Any]] = None):
         assert mode in ("plain", "shapes", "collect")
         self.mode = mode
         self.probes = probes or {}
@@ -77,7 +78,25 @@ class Tagger:
         # tag has an entry, only the (tiny) contraction is recorded instead of
         # the raw activations.
         self.contract = contract or {}
+        # name -> callable(ds) -> contracted G-side outer-product sum, used
+        # when the layer's probe is the fused ``{"gg": ...}`` form (see
+        # repro.core.fused): the contraction rides the backward pass as the
+        # probe's custom-VJP cotangent instead of a raw (N, d_out) array.
+        self.gcontract = gcontract or {}
         self.records: Dict[str, Any] = {}
+
+    def _add_probe(self, name: str, s):
+        """Add the layer's zero probe to ``s`` — or, for a fused ``{"gg"}``
+        probe, attach the custom-VJP that contracts the probe cotangent in
+        the backward pass itself."""
+        if name not in self.probes:
+            return s
+        p = self.probes[name]
+        if isinstance(p, dict):
+            from repro.core import fused
+            fn = self.gcontract.get(name, fused.einsum_gg)
+            return fused.apply_gprobe(s, p["gg"], fn)
+        return s + p
 
     def tag(self, name: str, a, s, weight=None):
         """Tag a dense map: ``a`` inputs (..., d_in), ``s`` outputs (..., d_out).
@@ -95,9 +114,7 @@ class Tagger:
         a_sg = jax.lax.stop_gradient(a)
         rec = {"aa": fn(a_sg)} if fn is not None else {"a": a_sg}
         self.records[name] = rec
-        if name in self.probes:
-            s = s + self.probes[name]
-        return s
+        return self._add_probe(name, s)
 
     def tag_conv(self, name: str, x, s):
         """Tag a convolution: ``x`` the RAW (pre-im2col) input
@@ -111,10 +128,11 @@ class Tagger:
         if self.mode == "shapes":
             self.records[name] = s
             return s
-        self.records[name] = {"cx": jax.lax.stop_gradient(x)}
-        if name in self.probes:
-            s = s + self.probes[name]
-        return s
+        fn = self.contract.get(name)
+        x_sg = jax.lax.stop_gradient(x)
+        self.records[name] = ({"aa": fn(x_sg)} if fn is not None
+                              else {"cx": x_sg})
+        return self._add_probe(name, s)
 
     def tag_embed(self, name: str, ids, s):
         """Tag an embedding lookup: ``ids`` int tokens, ``s`` embeddings."""

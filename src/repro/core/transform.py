@@ -222,6 +222,27 @@ def clip_by_global_norm(max_norm: float) -> Transform:
     return Transform(lambda params: (), update)
 
 
+def momentum_global_clip(momentum: float, max_norm: float) -> Transform:
+    """Fused ``chain(with_momentum(momentum), clip_by_global_norm(max_norm))``
+    as one traversal: the velocity update, its global norm, and the clip
+    rescale come out of a single pass over the update tree — the pipeline
+    stage the fused ``update_chain`` kernel serves inside ``KFACEngine``
+    (``KFACConfig.fixed_momentum`` / ``clip_delta_norm``).  State is the
+    velocity alone; the clip is stateless and applies to the emitted value
+    only (the stored velocity stays un-clipped, like the chained form)."""
+
+    def init(params):
+        return T.tree_zeros_like(params)
+
+    def update(u, vel, p):
+        vel = jax.tree.map(lambda v, ui: momentum * v + ui, vel, u)
+        gn = jnp.sqrt(T.tree_sqnorm(vel))
+        factor = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-20))
+        return T.tree_scale(vel, factor), vel
+
+    return Transform(init, update)
+
+
 def with_momentum(momentum: float) -> Transform:
     """Heavy-ball velocity: ``v <- momentum * v + u``; emits ``v``.
 

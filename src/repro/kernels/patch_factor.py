@@ -125,14 +125,16 @@ def patch_factor(x, c, *, taps: int, stride: int, t_out: int, alpha, beta,
     )(ab, x, x, c)
 
 
-def patch_factor_update(x, old, meta, alpha, beta, *,
-                        interpret: bool = True):
+def patch_factor_update(x, old, meta, alpha, beta, *, bt: int = 128,
+                        interpret: bool = True,
+                        autotune_mode: str = "off"):
     """The ``ConvKronecker`` A-side route: fused ``Ā ← β Ā + α P̂ᵀP̂`` for a
     1-D conv from the raw input, or ``None`` when the shape doesn't tile
     (the caller falls back to the einsum path).
 
     x: (B, T, C) raw (un-padded) input; old: (a_dim, a_dim) running factor
     with the homogeneous row/column last when ``meta.has_bias``.
+    ``autotune_mode`` != "off" looks up a tuned time-tile ``bt``.
     """
     if len(meta.conv_spatial) != 1:
         return None
@@ -142,12 +144,18 @@ def patch_factor_update(x, old, meta, alpha, beta, *,
     t_out = conv_out_len(t, k, s, meta.conv_pad)
     if not patch_tile_ok(ch, t_out, k, s):
         return None
+    if autotune_mode != "off":
+        from repro.kernels.autotune import tuned
+        cfg = tuned("patch_factor", (t_out, ch, k, s), x.dtype,
+                    interpret=interpret, mode=autotune_mode)
+        if cfg:
+            bt = cfg["bt"]
     lo, hi = conv_pad_amounts(t, k, s, meta.conv_pad)
     xp = jnp.pad(x, ((0, 0), (lo, hi), (0, 0))) if lo or hi else x
     d = k * ch
     core_old = old[:d, :d] if meta.has_bias else old
     core = patch_factor(xp, core_old, taps=k, stride=s, t_out=t_out,
-                        alpha=alpha, beta=beta, interpret=interpret)
+                        alpha=alpha, beta=beta, bt=bt, interpret=interpret)
     if not meta.has_bias:
         return core
     # homogeneous border: Σ_t patch (per tap, a strided slice sum) + count

@@ -171,6 +171,68 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool):
             "cost": _cost_dict(comp_shr),
             "hlo": hlo_cost.analyze(comp_shr.as_text()),
         }
+        # the fused fixed-lr update chain (use_rescale=False): one jit for
+        # precondition+momentum+clip+apply vs the three separately-staged
+        # ops it replaces — the bytes delta is the fusion's HBM win (each
+        # stage boundary writes and re-reads a weight-shaped intermediate)
+        from repro.utils import tree as T
+        kcfg_f = kcfg.replace(use_rescale=False, fixed_momentum=0.9,
+                              clip_delta_norm=1.0)
+        eng_f = optimizers.kfac(lm, kcfg_f, mesh).engine
+        grads_abs = params_abs
+
+        def fused_chain(state, params, grads, batch, rng):
+            p, s, _ = eng_f.apply_update_fused(state, params, grads,
+                                               batch, rng)
+            return p, s.delta0
+
+        def ref_precond(state, params, grads):
+            grads_reg = T.tree_axpy(kcfg_f.eta,
+                                    T.tree_cast(params, jnp.float32),
+                                    T.tree_cast(grads, jnp.float32))
+            return T.tree_scale(
+                eng_f._precondition(grads_reg, state.inv, state),
+                kcfg_f.fixed_lr)
+
+        def ref_momentum(delta, state):
+            return jax.tree.map(
+                lambda d, m: d + kcfg_f.fixed_momentum * m,
+                delta, state.delta0)
+
+        def ref_clip_apply(vel, params):
+            norm = jnp.sqrt(T.tree_sqnorm(vel))
+            factor = jnp.minimum(
+                jnp.float32(1.0),
+                kcfg_f.clip_delta_norm / jnp.maximum(norm, 1e-20))
+            return jax.tree.map(
+                lambda p, d: p + (factor * d).astype(p.dtype), params, vel)
+
+        with mesh:
+            comp_fused = jax.jit(fused_chain).lower(
+                state_abs, params_abs, grads_abs, batch_abs,
+                rng_abs).compile()
+            delta_abs = jax.eval_shape(ref_precond, state_abs, params_abs,
+                                       grads_abs)
+            ref_comps = {
+                "precondition": jax.jit(ref_precond).lower(
+                    state_abs, params_abs, grads_abs).compile(),
+                "momentum": jax.jit(ref_momentum).lower(
+                    delta_abs, state_abs).compile(),
+                "clip_apply": jax.jit(ref_clip_apply).lower(
+                    delta_abs, params_abs).compile(),
+            }
+        fused_hlo = hlo_cost.analyze(comp_fused.as_text())
+        ref_hlos = {k: hlo_cost.analyze(c.as_text())
+                    for k, c in ref_comps.items()}
+        ref_bytes = sum(h["bytes"] for h in ref_hlos.values())
+        rec["aux"]["update_chain"] = {
+            "fused": {"cost": _cost_dict(comp_fused), "hlo": fused_hlo},
+            "reference": {"stages": ref_hlos, "hlo_bytes": ref_bytes,
+                          "hlo_flops": sum(h["flops"]
+                                           for h in ref_hlos.values())},
+            "bytes_saved_fraction":
+                1.0 - fused_hlo["bytes"] / max(ref_bytes, 1.0),
+        }
     else:
         lm = LM(cfg, kcfg, mesh, compute_dtype=jnp.bfloat16, fsdp=False)
         # huge (MoE) models cannot hold bf16 params model-sharded only at

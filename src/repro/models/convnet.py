@@ -52,6 +52,7 @@ class ConvNet:
             name="head", param_path=("head",), d_in=c_in,
             d_out=cfg.n_classes, kind="dense", has_bias=True)
         self.contract_map = {}
+        self.gcontract_map = {}           # fused_stats G-side hooks (core/fused)
 
     # -- params ---------------------------------------------------------
     def init_params(self, key):
@@ -83,7 +84,7 @@ class ConvNet:
 
     def loss(self, params, probes, batch, rng, mode: str = "plain"):
         """((loss_true, loss_sampled), aux) — same contract as MLP/LM."""
-        tg = Tagger(mode, probes, self.contract_map)
+        tg = Tagger(mode, probes, self.contract_map, self.gcontract_map)
         z = self.logits(params, batch["x"], tg)
         logp = jax.nn.log_softmax(z, axis=-1)
         lt = -jnp.mean(jnp.take_along_axis(

@@ -92,6 +92,7 @@ class LM:
         self.defs = self._param_defs()
         self.metas = self._layer_metas()
         self.contract_map = self._contract_map()
+        self.gcontract_map = {}   # fused_stats G-side hooks (core/fused)
 
     # ------------------------------------------------------------------
     # parameter definitions
@@ -565,7 +566,7 @@ class LM:
 
         def body(h, xs):
             p, prs = xs
-            tg = Tagger(tg_mode, prs, self.contract_map)
+            tg = Tagger(tg_mode, prs, self.contract_map, self.gcontract_map)
             o, _ = self._attn(tg, "enc.attn", p["attn"],
                               rms_norm(h, p["ln1"], cfg.norm_eps),
                               jnp.arange(h.shape[1]), window=0, causal=False)
@@ -603,7 +604,7 @@ class LM:
             bp, prs = xs
             if b_ok or t_ok:
                 h = constrain(h, self.mesh, sp)
-            tg = Tagger(tg_mode, prs, self.contract_map)
+            tg = Tagger(tg_mode, prs, self.contract_map, self.gcontract_map)
             for pos, spec in enumerate(self.pattern):
                 h, a, _ = self._apply_block(spec, bp[pos], tg, h, positions,
                                             enc_out=enc_out)
@@ -666,7 +667,7 @@ class LM:
         """Returns ((loss_true, loss_sampled), aux)."""
         cfg = self.cfg
         params = self._cast_params(params)
-        tg = Tagger(mode, probes, self.contract_map)
+        tg = Tagger(mode, probes, self.contract_map, self.gcontract_map)
         x, positions, labels, mask, enc_out, extra = self._prepare_inputs(
             params, batch, tg, probes, mode)
         h, auxl, recs = self._backbone(params, x, positions, mode, probes,

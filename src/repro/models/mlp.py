@@ -50,6 +50,7 @@ class MLP:
         }
         self.layer_order = [f"layer{i}" for i in range(self.n_layers)]
         self.contract_map = {}            # MLP records raw ā (cross moments)
+        self.gcontract_map = {}           # fused_stats G-side hooks (core/fused)
 
     # -- params ---------------------------------------------------------
     def init_params(self, key, scale: float = None, sparse: bool = True):
@@ -98,7 +99,7 @@ class MLP:
 
     def loss(self, params, probes, batch, rng, mode: str = "plain"):
         """Returns ((loss_true, loss_sampled), aux) — same contract as LM."""
-        tg = Tagger(mode, probes, self.contract_map)
+        tg = Tagger(mode, probes, self.contract_map, self.gcontract_map)
         z = self.logits(params, batch["x"], tg)
         lt = jnp.mean(self._nll(z, batch["y"]))
         ys = self.sample_targets(jax.lax.stop_gradient(z), rng)

@@ -93,6 +93,9 @@ class KFACEngine:
             raise ValueError(
                 f"unknown refresh_mode {cfg.refresh_mode!r} (expected "
                 "'serial', 'staggered', 'sharded' or 'overlap')")
+        if cfg.autotune not in ("off", "cache", "force"):
+            raise ValueError(f"unknown autotune {cfg.autotune!r}"
+                             " (expected 'off', 'cache' or 'force')")
         # legacy knob: staggered_inverse=True was the only way to ask for
         # the round-robin refresh before refresh_mode existed
         self.refresh_mode = ("staggered"
@@ -112,6 +115,31 @@ class KFACEngine:
         self.blocks = build_blocks(self.metas, cfg)
         self.chain = TridiagChain(model, cfg) if self.tridiag else None
         self._probe_shapes = None
+        # backward-pass fusion of the factor statistics (core/fused): the
+        # A-side contractions ride the forward via the model's contract_map
+        # hooks and the G side via the custom-VJP gg-probes.  Installing the
+        # hooks mutates the model's contract maps — models are built per
+        # engine in practice; a tridiag engine must not share a model a
+        # fused engine already wired.
+        self.fused = bool(cfg.fused_stats) and not self.tridiag
+        self.fused_names = set()
+        if self.fused:
+            from repro.core import fused as FU
+            cmap = getattr(model, "contract_map", None)
+            gmap = getattr(model, "gcontract_map", None)
+            if cmap is not None and gmap is not None:
+                interpret = jax.default_backend() != "tpu"
+                self.fused_names = {n for n, m in self.metas.items()
+                                    if FU.fused_eligible(m)}
+                for n in sorted(self.fused_names):
+                    m = self.metas[n]
+                    if n not in cmap:
+                        mk = (FU.conv_a_contract if m.kind == "conv"
+                              else FU.dense_a_contract)
+                        cmap[n] = mk(m, cfg.kernel_backend, interpret,
+                                     cfg.autotune)
+                    gmap[n] = FU.g_contract(m, cfg.kernel_backend,
+                                            interpret, cfg.autotune)
 
     # ------------------------------------------------------------------
     def n_tokens(self, batch) -> int:
@@ -126,7 +154,15 @@ class KFACEngine:
         if self._probe_shapes is None:
             self._probe_shapes = self.model.probe_shapes(
                 jax.eval_shape(lambda b: b, batch))
-        return self.model.make_probes(self._probe_shapes)
+        probes = self.model.make_probes(self._probe_shapes)
+        if self.fused_names:
+            # fused layers swap the (N, d_out) zero probe for the tiny
+            # {"gg": (d_out, d_out)} probe whose VJP cotangent is the
+            # already-contracted second moment (core/fused.apply_gprobe)
+            from repro.core import fused as FU
+            for n in self.fused_names:
+                probes[n] = FU.gg_probe(self.metas[n])
+        return probes
 
     def _is_tagged(self, keypath) -> bool:
         return _path_tuple(keypath) in self.tagged
@@ -494,6 +530,89 @@ class KFACEngine:
         return new_params, state, metrics
 
     # ------------------------------------------------------------------
+    # fused fixed-lr update chain: precondition + momentum + global clip
+    # ------------------------------------------------------------------
+    def apply_update_fused(self, state: KFACState, params, grads, batch,
+                           rng, *, inv_override=None, gamma_override=None):
+        """The ``use_rescale=False`` path as ONE fused stage: per block,
+        ``D = −lr·(Ā⁻¹ V G⁻¹) + μ·M`` together with ``Σ D²`` comes out of a
+        single ``CurvatureBlock.precond_momentum`` call (Pallas blocks serve
+        it with the fused ``update_chain`` kernel), so the global-norm clip
+        folds into the parameter apply without ever re-reading the update.
+
+        With ``fixed_momentum == 0`` and ``clip_delta_norm == 0`` this is
+        bitwise the legacy three-stage path.  On T2 candidate steps the
+        caller passes candidate 0's inverses/gamma (the legacy fixed-lr
+        ``c_star = 0`` selection).  Returns (params', state', metrics)."""
+        cfg = self.cfg
+        inv = inv_override if inv_override is not None else state.inv
+        gamma_new = (gamma_override if gamma_override is not None
+                     else state.gamma)
+        lam_eta = state.lam + cfg.eta
+        alpha = -jnp.float32(cfg.fixed_lr)
+        mu = jnp.float32(cfg.fixed_momentum)
+        grads_reg = T.tree_axpy(cfg.eta, T.tree_cast(params, jnp.float32),
+                                T.tree_cast(grads, jnp.float32))
+        sqs = []
+
+        # untagged params: diagonal curvature, axpy'd in the same traversal
+        def leaf(kp, g, dd, mom):
+            if self._is_tagged(kp):
+                return mom            # overwritten by the block loop below
+            d = alpha * (g / (dd + lam_eta)) + mu * mom
+            sqs.append(jnp.sum(d * d))
+            return d
+
+        vel = jax.tree_util.tree_map_with_path(leaf, grads_reg, state.diag,
+                                               state.delta0)
+        if self.chain is not None:
+            vs = {name: T.get_path(grads_reg, self.metas[name].param_path)
+                  for name in self.model.layer_order}
+            us = self.chain.precondition(inv[TridiagChain.TRI], vs)
+            for name, blk in self.blocks.items():
+                path = blk.meta.param_path
+                u = us.get(name, T.get_path(grads_reg, path))
+                d = (alpha * u.astype(jnp.float32)
+                     + mu * T.get_path(state.delta0, path))
+                sqs.append(jnp.sum(d * d))
+                vel = T.set_path(vel, path, d)
+        else:
+            for name, blk in self.blocks.items():
+                path = blk.meta.param_path
+                d, sq = blk.precond_momentum(
+                    inv[name], T.get_path(grads_reg, path),
+                    T.get_path(state.delta0, path), alpha, mu,
+                    eigen=self.eigen)
+                sqs.append(sq)
+                vel = T.set_path(vel, path, d)
+
+        norm = jnp.sqrt(sum(sqs) if sqs else jnp.float32(0.0))
+        if cfg.clip_delta_norm > 0:
+            factor = jnp.minimum(
+                jnp.float32(1.0),
+                cfg.clip_delta_norm / jnp.maximum(norm, 1e-20))
+            new_params = jax.tree.map(
+                lambda p, d: p + (factor * d).astype(p.dtype), params, vel)
+            delta_norm = factor * norm
+        else:
+            new_params = jax.tree.map(
+                lambda p, d: p + d.astype(p.dtype), params, vel)
+            delta_norm = norm
+
+        # delta0 keeps the PRE-clip velocity (with_momentum semantics)
+        state = state.replace(step=state.step + 1, delta0=vel,
+                              m_delta=jnp.float32(-1.0), inv=inv,
+                              gamma=gamma_new)
+        metrics = {
+            "alpha": jnp.float32(cfg.fixed_lr), "mu": mu,
+            "m_delta": jnp.float32(-1.0), "gamma": gamma_new,
+            "lam": state.lam,
+            "grad_norm": jnp.sqrt(T.tree_sqnorm(grads_reg)),
+            "delta_norm": delta_norm,
+        }
+        return new_params, state, metrics
+
+    # ------------------------------------------------------------------
     # lambda adaptation (S6.5)
     # ------------------------------------------------------------------
     def lambda_step(self, state: KFACState, new_params, batch, rng):
@@ -564,24 +683,40 @@ class KFACPipeline:
                 self._overlap = OverlapController(
                     self._refresh_sharded, bound=max(1, cfg.t3),
                     deterministic=cfg.overlap_deterministic)
-        self._update = jax.jit(
-            lambda s, p, g, b, r: eng.apply_update(s, p, g, b, r))
         self._multi = jax.jit(eng.refresh_multi)
-        self._update3 = jax.jit(
-            lambda s, p, g, b, r, gs, i3: eng.apply_update(
-                s, p, g, b, r,
-                cand_inv=[jax.tree.map(lambda x: x[c], i3) for c in range(3)],
-                gammas=gs))
+        if cfg.use_rescale:
+            self._update = jax.jit(
+                lambda s, p, g, b, r: eng.apply_update(s, p, g, b, r))
+            self._update3 = jax.jit(
+                lambda s, p, g, b, r, gs, i3: eng.apply_update(
+                    s, p, g, b, r,
+                    cand_inv=[jax.tree.map(lambda x: x[c], i3)
+                              for c in range(3)],
+                    gammas=gs))
+            # precondition is fused into the quadratic-model stage: the
+            # M(delta) solve needs every candidate's preconditioned delta
+            # and the exact-F products in one HLO (S6.4/S6.6)
+            update_stage = Stage("precondition+quadratic_model_lr_momentum",
+                                 self._stage_quadratic)
+        else:
+            # fixed-lr path: precondition + momentum + global-norm clip as
+            # one fused stage (docs/optimizer_api.md "stage map"); on T2
+            # steps the gamma sweep keeps candidate 0 (legacy c_star=0)
+            self._update = jax.jit(
+                lambda s, p, g, b, r: eng.apply_update_fused(s, p, g, b, r))
+            self._update3 = jax.jit(
+                lambda s, p, g, b, r, gs, i3: eng.apply_update_fused(
+                    s, p, g, b, r,
+                    inv_override=jax.tree.map(lambda x: x[0], i3),
+                    gamma_override=gs[0]))
+            update_stage = Stage("fused_precondition_momentum_clip",
+                                 self._stage_quadratic)
         self._lambda = jax.jit(eng.lambda_step)
         self.stages = [
             Stage("estimate_stats", self._stage_estimate_stats),
             Stage("scheduled_inverse_refresh", self._stage_refresh),
             Stage("eigen_rescale", self._stage_eigen_rescale),
-            # precondition is fused into the quadratic-model stage: the
-            # M(delta) solve needs every candidate's preconditioned delta
-            # and the exact-F products in one HLO (S6.4/S6.6)
-            Stage("precondition+quadratic_model_lr_momentum",
-                  self._stage_quadratic),
+            update_stage,
             Stage("adapt_lambda", self._stage_adapt_lambda),
         ]
 

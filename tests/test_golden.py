@@ -44,7 +44,8 @@ REL_BAND = 0.07
 
 
 def golden_run(inv_mode: str, steps: int = STEPS,
-               refresh_mode: str = "serial", return_history: bool = False):
+               refresh_mode: str = "serial", return_history: bool = False,
+               fused_stats: bool = False):
     """The pinned setup: reduced autoencoder (64-32-16-8 mirrored), sparse
     paper init, full-batch synthetic data, eigh inverses, T3=5 refresh,
     driven end-to-end by the real Trainer."""
@@ -54,7 +55,7 @@ def golden_run(inv_mode: str, steps: int = STEPS,
     data = SyntheticAutoencoderData(dims[0], 8, 256, seed=7)
     cfg = KFACConfig(inv_mode=inv_mode, inverse_method="eigh",
                      lambda_init=3.0, t3=5, eta=1e-5,
-                     refresh_mode=refresh_mode,
+                     refresh_mode=refresh_mode, fused_stats=fused_stats,
                      # golden runs must be wall-clock independent: overlap
                      # commits exactly at due steps, not on is_ready races
                      overlap_deterministic=True)
@@ -84,6 +85,24 @@ def test_golden_trajectory(inv_mode):
     # trajectory shape, not just endpoints: sustained descent
     assert losses[-1] < 0.35 * losses[0], (losses[0], losses[-1])
     assert all(b < a * 1.05 for a, b in zip(got, got[1:])), got
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("inv_mode", ["blkdiag", "eigen"])
+def test_fused_stats_golden_trajectory(inv_mode):
+    """fused_stats=True folds the factor accumulation into the backward
+    pass (core/fused custom-VJP gg-probes + contract-map hooks); the
+    statistics are the same numbers, so the run must sit inside the
+    *existing* GOLDEN envelope — no separate pin."""
+    losses = golden_run(inv_mode, fused_stats=True)
+    want = GOLDEN[inv_mode]
+    got = [losses[i] for i in CHECKPOINTS]
+    for step, w, g in zip(CHECKPOINTS, want, got):
+        assert abs(g - w) <= REL_BAND * w, (
+            f"fused {inv_mode}: step {step} loss {g:.4f} deviates from the "
+            f"two-pass golden {w:.4f} — fused statistics must not change "
+            f"numerics")
+    assert losses[-1] < 0.35 * losses[0], (losses[0], losses[-1])
 
 
 # ---------------------------------------------------------------------------
