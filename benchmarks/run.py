@@ -16,7 +16,8 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # suite name -> BENCH_*.json filename for the machine-readable trajectory
 _JSON_SUITES = {"kernels": "BENCH_kernels.json",
-                "optimizer_race": "BENCH_optimizer.json"}
+                "optimizer_race": "BENCH_optimizer.json",
+                "serving": "BENCH_serving.json"}
 
 # per-suite extra row fields (see benchlib docstring for the schema)
 _JSON_EXTRAS = {
@@ -29,13 +30,14 @@ def main() -> None:
     suites = []
     from benchmarks import (bench_optimizer_race, bench_damping,
                             bench_fisher_quality, bench_batch_scaling,
-                            bench_kernels, benchlib, roofline)
+                            bench_kernels, bench_serving, benchlib, roofline)
     suites = [
         ("optimizer_race", bench_optimizer_race.run),   # Fig. 10/11
         ("damping", bench_damping.run),                 # Fig. 7
         ("fisher_quality", bench_fisher_quality.run),   # Fig. 2/3/5/6
         ("batch_scaling", bench_batch_scaling.run),     # Fig. 9
         ("kernels", bench_kernels.run),                 # S8 cost model
+        ("serving", bench_serving.run),                 # continuous batching
         ("roofline", roofline.run),                     # dry-run derived
     ]
     print("name,us_per_call,derived")

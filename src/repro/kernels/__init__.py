@@ -7,8 +7,11 @@
 #                     the damped rescale fused into the middle matmul
 #   flash_attention — fwd flash attention (GQA/causal/window/softcap) for the
 #                     model substrate's serving path
-#   flash_decode    — one-token decode vs a long (sequence-sharded) KV cache,
-#                     valid length via scalar prefetch
+#   flash_decode    — one-token decode vs a long (sequence-sharded) KV cache;
+#                     per-row (B,) valid lengths via scalar prefetch (each
+#                     continuous-batching slot masks its own prefix), with
+#                     sliding-window and softcap support for gemma2-style
+#                     local layers
 # ops.py exposes jit'd wrappers with a pure-jnp fallback; ref.py holds the
 # oracles the tests sweep against (interpret=True on CPU); compat.py shims
 # renamed Pallas TPU APIs across JAX versions and hosts the tile_ok gate

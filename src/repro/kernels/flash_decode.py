@@ -1,10 +1,20 @@
-"""Flash-decode kernel: one query token against a long KV cache.
+"""Flash-decode kernel: one query token per row against a long KV cache.
 
 The serve-side counterpart of the Perf-1 cache layout (EXPERIMENTS §Perf):
 the key axis is the grid's innermost dimension, so on a sequence-sharded
 cache each core streams only its KV slice; the online-softmax scratch
-carries (m, l, acc) across key blocks.  The cache's valid length arrives as
-a scalar-prefetch argument (position masking without recompilation).
+carries (m, l, acc) across key blocks.  The cache's valid lengths arrive as
+a ``(B,)`` scalar-prefetch vector — every batch row masks its own
+``[0, len_b)`` prefix (continuous batching: slots decode at *different*
+positions), with an optional sliding window (``[len_b - window, len_b)``)
+and attention-score softcap so the gemma2-style local layers stay on the
+kernel path.
+
+``interpret`` has no hardcoded default: ``None`` resolves from the live
+backend (compiled on TPU, interpreter elsewhere), so a direct caller can
+never silently run the interpreter on a compiled backend; the jit'd
+dispatch layer (``kernels.ops``) threads its ``_STATE`` explicitly like the
+other kernels.
 """
 from __future__ import annotations
 
@@ -20,7 +30,8 @@ NEG_INF = -1e30
 
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            scale, k_steps, bk):
+            scale, k_steps, bk, window, cap):
+    bb = pl.program_id(0)
     ik = pl.program_id(2)
 
     @pl.when(ik == 0)
@@ -32,8 +43,14 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     q = q_ref[0].astype(jnp.float32)                     # (1, hd)
     k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (1, bk)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
     k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
-    s = jnp.where(k_pos < len_ref[0], s, NEG_INF)
+    length = len_ref[bb]                                 # this row's valid len
+    valid = k_pos < length
+    if window:
+        valid &= k_pos >= length - window
+    s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
@@ -51,9 +68,16 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                     / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-def flash_decode(q, k, v, length, *, bk: int = 128, interpret: bool = True):
-    """q: (B, Hq, hd) one token; k, v: (B, Hkv, S, hd); length: scalar int32
-    count of valid cache entries.  Returns (B, Hq, hd)."""
+def flash_decode(q, k, v, lengths, *, bk: int = 128, window: int = 0,
+                 cap: float = 0.0, interpret=None):
+    """q: (B, Hq, hd) one token per row; k, v: (B, Hkv, S, hd); lengths:
+    ``(B,)`` int32 valid-cache-entry counts (a scalar broadcasts — the
+    legacy single-length form).  Returns (B, Hq, hd).
+
+    window > 0 restricts row b to keys in ``[lengths[b]-window,
+    lengths[b])``; cap > 0 applies the pre-softmax score softcap.
+    ``interpret=None`` resolves from the backend (never silently the
+    interpreter on TPU)."""
     b, hq, hd = q.shape
     _, hkv, s_len, _ = k.shape
     assert hq % hkv == 0
@@ -61,9 +85,14 @@ def flash_decode(q, k, v, length, *, bk: int = 128, interpret: bool = True):
     bk = min(bk, s_len)
     assert s_len % bk == 0
     k_steps = s_len // bk
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1),
+                               (b,))
     grid = (b, hq, k_steps)
     kernel = functools.partial(_kernel, scale=1.0 / math.sqrt(hd),
-                               k_steps=k_steps, bk=bk)
+                               k_steps=k_steps, bk=bk, window=int(window),
+                               cap=float(cap))
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -86,5 +115,5 @@ def flash_decode(q, k, v, length, *, bk: int = 128, interpret: bool = True):
         ),
         out_shape=jax.ShapeDtypeStruct((b, hq, hd), q.dtype),
         interpret=interpret,
-    )(jnp.asarray(length, jnp.int32).reshape(1), q, k, v)
+    )(lengths, q, k, v)
     return out

@@ -62,18 +62,32 @@ def precondition(a_inv, v, g_inv):
     return _ref.precondition_ref(a_inv, v, g_inv)
 
 
-def flash_decode(q, k, v, length, *, bk=128):
-    """One-token decode vs a long cache: (B,Hq,hd) x (B,Hkv,S,hd)."""
-    if enabled() and k.shape[2] % bk == 0 and q.shape[-1] % 8 == 0:
-        return _fd.flash_decode(q, k, v, length, bk=bk,
-                                interpret=_STATE["interpret"])
+def flash_decode(q, k, v, lengths, *, bk=128, window=0, cap=0.0):
+    """One-token decode vs a long cache: (B,Hq,hd) x (B,Hkv,S,hd).
+
+    ``lengths`` is a ``(B,)`` int32 vector of per-row valid cache entries
+    (a scalar broadcasts): continuous-batching slots decode at different
+    positions, so each row masks its own ``[0, len_b)`` prefix —
+    ``[len_b - window, len_b)`` when ``window`` > 0 (gemma2 local layers);
+    ``cap`` > 0 soft-caps the attention scores."""
     b, hq, hd = q.shape
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1),
+                               (b,))
+    if enabled() and k.shape[2] % bk == 0 and q.shape[-1] % 8 == 0:
+        return _fd.flash_decode(q, k, v, lengths, bk=bk, window=window,
+                                cap=cap, interpret=_STATE["interpret"])
     hkv, s_len = k.shape[1], k.shape[2]
     g = hq // hkv
     qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
     sc = jnp.einsum("bhgd,bhsd->bhgs", qg, k.astype(jnp.float32))
     sc = sc / jnp.sqrt(jnp.float32(hd))
-    sc = jnp.where(jnp.arange(s_len) < length, sc, -1e30)
+    if cap:
+        sc = cap * jnp.tanh(sc / cap)
+    k_pos = jnp.arange(s_len)
+    valid = k_pos[None, :] < lengths[:, None]            # (B, S) per-row mask
+    if window:
+        valid &= k_pos[None, :] >= lengths[:, None] - window
+    sc = jnp.where(valid[:, None, None, :], sc, -1e30)
     p = jax.nn.softmax(sc, -1)
     out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
     return out.reshape(b, hq, hd).astype(q.dtype)

@@ -1,4 +1,4 @@
-"""Serving launcher: batched decode with the slot engine.
+"""Serving launcher: continuous batching over the paged-KV engine.
 
   python -m repro.launch.serve --arch smollm-135m --reduced --requests 6
 """
@@ -32,12 +32,14 @@ def main(argv=None):
                                    for j in range(4 + i % 3)],
                     max_new=args.max_new, temperature=0.0 if i % 2 else 0.8)
             for i in range(args.requests)]
-    eng.run(reqs)
+    rep = eng.run(reqs)
     for r in reqs:
         print(f"[serve] req {r.uid}: prompt={r.prompt} -> out={r.out}")
     assert all(r.done or r.out for r in reqs)
-    print(f"[serve] completed {sum(r.done for r in reqs)}/{len(reqs)}")
-    return reqs
+    print(f"[serve] {rep.steps} steps: {len(rep.completed)} completed, "
+          f"{len(rep.unfinished)} in flight, {len(rep.unserved)} queued, "
+          f"{len(rep.failed)} rejected")
+    return rep
 
 
 if __name__ == "__main__":

@@ -61,7 +61,8 @@ def apply_rope(x, positions, theta: float):
 # ---------------------------------------------------------------------------
 
 def _attn_chunk(q, k, v, q_pos, k_pos, *, causal, window, cap, kv_valid):
-    """q: (B, Cq, Hq, hd); k/v: (B, Tk, Hkv, hd); positions 1-d int arrays."""
+    """q: (B, Cq, Hq, hd); k/v: (B, Tk, Hkv, hd); k_pos is 1-d; q_pos is
+    (Cq,) shared or (B, Cq) per-row (continuous-batching decode)."""
     b, cq, hq, hd = q.shape
     tk, hkv = k.shape[1], k.shape[2]
     group = hq // hkv
@@ -69,16 +70,21 @@ def _attn_chunk(q, k, v, q_pos, k_pos, *, causal, window, cap, kv_valid):
     scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
                         k.astype(jnp.float32)) / math.sqrt(hd)
     scores = softcap(scores, cap)
-    mask = jnp.ones((cq, tk), dtype=bool)
-    dq = q_pos[:, None]
-    dk = k_pos[None, :]
+    per_row = q_pos.ndim == 2
+    dq = q_pos[..., :, None]             # (Cq,1) or (B,Cq,1)
+    dk = k_pos[None, :] if not per_row else k_pos[None, None, :]
+    mask = jnp.ones(dq.shape[:-1] + (tk,), dtype=bool)
     if causal:
         mask &= dq >= dk
     if window:
         mask &= dq - dk < window
     if kv_valid is not None:  # (B, Tk) validity for decode caches
-        mask = mask[None] & kv_valid[:, None, :]
+        if not per_row:
+            mask = mask[None]
+        mask = mask & kv_valid[:, None, :]
         mask = mask[:, None, None]  # (B,1,1,Cq,Tk)
+    elif per_row:
+        mask = mask[:, None, None]
     else:
         mask = mask[None, None, None]
     scores = jnp.where(mask, scores, -1e30)
@@ -92,8 +98,9 @@ def attention(q, k, v, *, causal=True, window=0, cap=0.0, q_offset=None,
     """Multi-head attention with GQA.
 
     q: (B, Tq, Hq, hd);  k, v: (B, Tk, Hkv, hd).
-    q_offset: scalar position of q[0] (decode); default 0 (prefill/train
-    aligned so q_pos = arange(Tq), k_pos = arange(Tk)).
+    q_offset: position of q[0] (decode) — scalar, or (B,) per-row for
+    continuous-batching slots at different positions; default 0
+    (prefill/train aligned so q_pos = arange(Tq), k_pos = arange(Tk)).
     kv_valid: (B, Tk) bool — valid cache entries during decode.
     """
     b, tq, hq, hd = q.shape
@@ -101,8 +108,10 @@ def attention(q, k, v, *, causal=True, window=0, cap=0.0, q_offset=None,
     k_pos = jnp.arange(tk)
     if q_offset is None:
         q_pos0 = jnp.arange(tq)
-    else:
+    elif jnp.ndim(q_offset) == 0:
         q_pos0 = q_offset + jnp.arange(tq)
+    else:                          # (B,) per-row offsets -> (B, Tq)
+        q_pos0 = jnp.asarray(q_offset)[:, None] + jnp.arange(tq)[None, :]
 
     if tq <= q_chunk:
         return _attn_chunk(q, k, v, q_pos0, k_pos, causal=causal,
@@ -112,7 +121,10 @@ def attention(q, k, v, *, causal=True, window=0, cap=0.0, q_offset=None,
         q_chunk -= 1
     n = tq // q_chunk
     qs = q.reshape(b, n, q_chunk, hq, hd).swapaxes(0, 1)  # (n, B, Cq, Hq, hd)
-    ps = q_pos0.reshape(n, q_chunk)
+    if q_pos0.ndim == 2:
+        ps = q_pos0.reshape(b, n, q_chunk).swapaxes(0, 1)  # (n, B, Cq)
+    else:
+        ps = q_pos0.reshape(n, q_chunk)
 
     def body(_, xs):
         qc, pc = xs

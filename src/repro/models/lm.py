@@ -25,6 +25,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, KFACConfig
 from repro.core import factors as F
+from repro.kernels import ops
 from repro.core.tags import LayerMeta, Tagger, merge_records
 from repro.models import params as PM
 from repro.models.conv import conv, conv_meta
@@ -415,13 +416,30 @@ class LM:
         new_cache = None
         kv_valid = None
         q_offset = None
-        if cache is not None:          # decode: splice into cache
-            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), decode_pos, axis=1)
-            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), decode_pos, axis=1)
+        if cache is not None:          # decode: splice into cache, per row
+            # decode_pos is a (B,) vector — continuous-batching slots sit at
+            # *different* positions, so each row splices at its own offset
+            bidx = jnp.arange(bsz)
+            tidx = decode_pos[:, None] + jnp.arange(t)[None, :]
+            ck = cache["k"].at[bidx[:, None], tidx].set(
+                k.astype(cache["k"].dtype))
+            cv = cache["v"].at[bidx[:, None], tidx].set(
+                v.astype(cache["v"].dtype))
             new_cache = {"k": ck, "v": cv}
+            if t == 1:
+                # serve path: one token per row against the full cache —
+                # route through the flash-decode kernel (einsum fallback
+                # masks per-row; Pallas gets the lengths via scalar
+                # prefetch).  Row b attends exactly [0, decode_pos[b]].
+                o = ops.flash_decode(
+                    q[:, 0], ck.transpose(0, 2, 1, 3), cv.transpose(0, 2, 1, 3),
+                    decode_pos + 1, window=window, cap=cfg.attn_softcap)
+                o = o[:, None].astype(x.dtype)
+                o = dense(tg, f"{name}.o", p["wo"], o.reshape(bsz, t, hq * hd))
+                return o, new_cache
             k, v = ck, cv
-            kv_valid = jnp.arange(k.shape[1])[None, :] <= decode_pos + t - 1
-            kv_valid = jnp.broadcast_to(kv_valid, (bsz, k.shape[1]))
+            kv_valid = (jnp.arange(k.shape[1])[None, :]
+                        <= decode_pos[:, None] + t - 1)
             q_offset = decode_pos
         elif build_cache and kv_x is None:
             new_cache = {"k": k.astype(self.cdtype), "v": v.astype(self.cdtype)}
@@ -784,14 +802,23 @@ class LM:
         return logits, cache
 
     def decode_step(self, params, cache, tokens, pos):
-        """One decode step. tokens: (B, 1); pos: scalar int32 position."""
+        """One decode step. tokens: (B, 1); pos: scalar int32 position, or a
+        ``(B,)`` vector of *per-slot* positions (continuous batching: each
+        slot splices and attends at its own offset)."""
         cfg = self.cfg
         params = self._cast_params(params)
         tg = Tagger("plain")
         x = self._embed(params, tokens, tg)
+        pos = jnp.asarray(pos, jnp.int32)
+        pos_vec = jnp.broadcast_to(pos.reshape(-1), (tokens.shape[0],))
         if cfg.frontend == "audio":
-            x = x + sinusoid_posemb(1, cfg.d_model, offset=pos).astype(x.dtype)[None]
-        positions = jnp.full((tokens.shape[0], 1), pos, jnp.int32)
+            half = cfg.d_model // 2
+            freq = jnp.exp(-math.log(10000.0)
+                           * jnp.arange(half, dtype=jnp.float32) / half)
+            ang = pos_vec.astype(jnp.float32)[:, None] * freq[None, :]
+            pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+            x = x + pe[:, None, :].astype(x.dtype)
+        positions = pos_vec[:, None]
         enc_out = cache.get("enc_out") if isinstance(cache, dict) else None
 
         def body(h, xs):
@@ -801,7 +828,7 @@ class LM:
                 h, _, c = self._apply_block(spec, bp[pos_i], tg, h, positions,
                                             enc_out=enc_out,
                                             cache=cs[f"pos{pos_i}"],
-                                            decode_pos=pos)
+                                            decode_pos=pos_vec)
                 new_cs[f"pos{pos_i}"] = c
             return h, new_cs
 

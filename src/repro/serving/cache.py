@@ -1,0 +1,140 @@
+"""Paged KV cache: block pools per layer group + gather/scatter views.
+
+Layout
+------
+For every attention pattern position ``posX`` of the model there is one
+``k`` and one ``v`` pool of shape ``(ng, num_pages, page_size, hkv, hd)``
+(``ng`` = the model's scan-group leading dim; same dtype as the serve-side
+dense cache, bfloat16).  All layers share one *page-id space*: a slot's
+page table row lists the physical pages backing its logical positions in
+order, and that same row indexes every layer's pools — exactly the
+vLLM-style block table, minus per-layer tables.
+
+The decode step runs against a *dense gathered view*: ``gather`` reorders
+each slot's pages back into logical order, producing the
+``(ng, B, S_view, hkv, hd)`` cache ``model.decode_step`` expects, where
+``S_view = max_blocks * page_size`` is fixed so the step compiles once.
+After the step, ``scatter_token`` writes the one new KV row per slot back
+into its physical page.  Rows whose slot is idle carry a page table of null
+pages (page 0, reserved by the allocator), so their writes never touch a
+live allocation.
+
+Attention never reads stale bytes from a *reused* page: row ``b`` of the
+gathered view is masked to ``[0, len_b)`` by the per-slot length vector
+(``ops.flash_decode``), and every position in that prefix was written by
+the current owner (prefill covers ``[0, prompt_len)``, decode extends one
+position per step) — a recycled page is therefore fully overwritten before
+any of it is attended.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def _check_supported(model) -> None:
+    cfg = model.cfg
+    bad = [s.attn for s in model.pattern if s.attn not in ("global", "local")]
+    if bad or cfg.encoder_layers or any(s.cross for s in model.pattern):
+        raise NotImplementedError(
+            f"paged serving engine supports attention-only decoders; "
+            f"{cfg.name} has attn kinds "
+            f"{sorted({s.attn for s in model.pattern})}"
+            + (", encoder/cross-attention" if cfg.encoder_layers else ""))
+
+
+class PagedKVCache:
+    """Owns the pool layout + the pure gather/scatter functions used inside
+    the engine's jitted step.  The pools themselves are a plain pytree held
+    by the engine (functional updates)."""
+
+    def __init__(self, model, *, batch_slots: int, max_len: int,
+                 page_size: int = 8, num_pages: int = None,
+                 dtype=jnp.bfloat16):
+        _check_supported(model)
+        if page_size < 1:
+            raise ValueError(f"page_size={page_size}")
+        self.model = model
+        self.b = batch_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.max_blocks = max(1, math.ceil(max_len / page_size))
+        self.s_view = self.max_blocks * page_size
+        # default capacity: every slot can reach max_len, + 1 null page
+        self.num_pages = (1 + batch_slots * self.max_blocks
+                          if num_pages is None else num_pages)
+        self.dtype = dtype
+        cfg = model.cfg
+        self.layer_names = [f"pos{i}" for i in range(len(model.pattern))]
+        self._kv_shape = (model.n_groups, self.num_pages, page_size,
+                          cfg.n_kv_heads, cfg.hd)
+
+    def blocks_for(self, n_positions: int) -> int:
+        """Pages needed to back ``n_positions`` logical cache entries."""
+        return max(1, math.ceil(n_positions / self.page_size))
+
+    # -- pool construction -------------------------------------------------
+    def init_pools(self) -> Dict[str, Dict[str, jax.Array]]:
+        """Zeroed pools (structurally — a fresh slot attends nothing but
+        positions it wrote, and the null page is all-zero garbage)."""
+        return {name: {"k": jnp.zeros(self._kv_shape, self.dtype),
+                       "v": jnp.zeros(self._kv_shape, self.dtype)}
+                for name in self.layer_names}
+
+    # -- pure views (jit-safe) ---------------------------------------------
+    def gather(self, pools, page_table):
+        """pools + ``(B, max_blocks)`` page table -> dense decode cache
+        ``{posX: {k,v: (ng, B, S_view, hkv, hd)}}`` in logical order."""
+        ng = self.model.n_groups
+
+        def one(pool):
+            g = jnp.take(pool, page_table, axis=1)  # (ng,B,nb,P,hkv,hd)
+            return g.reshape(ng, self.b, self.s_view, *pool.shape[3:])
+
+        return {name: {"k": one(p["k"]), "v": one(p["v"])}
+                for name, p in pools.items()}
+
+    def scatter_token(self, pools, dense_cache, page_table, pos):
+        """Write each row's KV at logical position ``pos[b]`` (just spliced
+        into the dense view by ``decode_step``) back to its physical page."""
+        bidx = jnp.arange(self.b)
+        page = jnp.take_along_axis(page_table,
+                                   (pos // self.page_size)[:, None],
+                                   axis=1)[:, 0]
+        off = pos % self.page_size
+        out = {}
+        for name, p in pools.items():
+            row_k = dense_cache[name]["k"][:, bidx, pos]    # (ng,B,hkv,hd)
+            row_v = dense_cache[name]["v"][:, bidx, pos]
+            out[name] = {
+                "k": p["k"].at[:, page, off].set(row_k.astype(p["k"].dtype)),
+                "v": p["v"].at[:, page, off].set(row_v.astype(p["v"].dtype)),
+            }
+        return out
+
+    # -- host-side prefill write ------------------------------------------
+    def write_prefill(self, pools, pages, prefill_cache, prompt_len: int):
+        """Write a one-request prefill cache (``(ng, 1, Tp, hkv, hd)``
+        leaves) into the first ``blocks_for(Tp)`` of ``pages``."""
+        nb = self.blocks_for(prompt_len)
+        if nb > len(pages):
+            raise ValueError(f"prompt needs {nb} pages, slot holds "
+                             f"{len(pages)}")
+        pids = jnp.asarray(pages[:nb], jnp.int32)
+        pad = nb * self.page_size - prompt_len
+        ng = self.model.n_groups
+        out = {}
+        for name in self.layer_names:
+            src = prefill_cache[name]
+            new = {}
+            for kv in ("k", "v"):
+                x = src[kv]
+                x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                x = x.reshape(ng, nb, self.page_size, *x.shape[3:])
+                new[kv] = pools[name][kv].at[:, pids].set(
+                    x.astype(self.dtype))
+            out[name] = new
+        return out

@@ -1,0 +1,246 @@
+"""Continuous-batching inference engine over a paged KV cache.
+
+Per step, every *active* slot decodes one token at its **own** position
+(``decode_step`` takes the ``(B,)`` position vector straight through to
+``ops.flash_decode``'s per-row length masking); finished slots free their
+pages and the queue refills them in-flight, without touching any other
+slot's cache:
+
+* prefill is a one-shot ``model.prefill`` on just that request (batch 1),
+  written only into the slot's freshly allocated pages — it cannot advance
+  or overwrite another active slot's entries;
+* idle rows ride the batched step against the reserved null page, so their
+  masked garbage writes also can't land in a live allocation;
+* a slot only ever attends ``[0, its_len)`` — the per-slot length vector is
+  the mask, so zeroed/stale cache beyond a slot's length never pollutes its
+  softmax.
+
+Termination: a cache of ``max_len`` yields exactly ``max_len`` usable
+positions — a prompt of ``Tp`` tokens can emit up to ``max_len - Tp + 1``
+tokens (the first comes from the prefill logits; the last sampled token is
+returned but never written back).  ``run`` reports — never silently drops —
+requests still in flight or queued when ``max_steps`` is hit.
+
+The slot-serial reference engine (``serial_engine`` / ``batch_slots=1``)
+runs the identical compute path one request at a time; under greedy
+decoding the batched engine must match it token-for-token.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.allocator import PageAllocator
+from repro.serving.cache import PagedKVCache
+from repro.serving.scheduler import Request, Scheduler
+
+
+@dataclass
+class RunReport:
+    """What ``Engine.run`` actually did.  ``unfinished`` (in-flight) and
+    ``unserved`` (never admitted) are non-empty only when ``max_steps``
+    cut the run short — they are reported, not dropped."""
+    steps: int = 0
+    completed: List[Request] = field(default_factory=list)
+    unfinished: List[Request] = field(default_factory=list)
+    unserved: List[Request] = field(default_factory=list)
+    failed: List[Request] = field(default_factory=list)
+
+    @property
+    def truncated(self) -> bool:
+        return bool(self.unfinished or self.unserved)
+
+
+class Engine:
+    """Continuous-batching engine: FIFO admission into ``batch_slots``
+    in-flight rows, paged KV cache with free-list reuse, one-shot prefill
+    per admitted request, flash-decode batched steps."""
+
+    def __init__(self, model, params, *, batch_slots: int, max_len: int,
+                 page_size: int = 8, num_pages: int = None,
+                 rng_seed: int = 0):
+        self.model = model
+        self.params = params
+        self.b = batch_slots
+        self.max_len = max_len
+        self.kv = PagedKVCache(model, batch_slots=batch_slots,
+                               max_len=max_len, page_size=page_size,
+                               num_pages=num_pages)
+        self.alloc = PageAllocator(self.kv.num_pages)
+        self.sched = Scheduler(batch_slots)
+        self.pools = self.kv.init_pools()
+        self.pos = np.zeros(batch_slots, np.int32)       # per-slot next pos
+        self.page_table = np.zeros((batch_slots, self.kv.max_blocks),
+                                   np.int32)
+        self.last_tok = np.zeros((batch_slots, 1), np.int32)
+        self.slot_pages: List[List[int]] = [[] for _ in range(batch_slots)]
+        self.rng = jax.random.PRNGKey(rng_seed)
+        self._failed: List[Request] = []
+        self._prefill = jax.jit(model.prefill)
+        self._step = jax.jit(self._decode_fn)
+
+    # ------------------------------------------------------------------
+    @property
+    def cache(self):
+        """The paged KV pools (zero at construction, structurally)."""
+        return self.pools
+
+    def reset(self) -> None:
+        """Clear all serving state; keeps the compiled step functions."""
+        self.pools = self.kv.init_pools()
+        self.alloc = PageAllocator(self.kv.num_pages)
+        self.sched = Scheduler(self.b)
+        self.pos[:] = 0
+        self.page_table[:] = 0
+        self.last_tok[:] = 0
+        self.slot_pages = [[] for _ in range(self.b)]
+        self._failed = []
+
+    # ------------------------------------------------------------------
+    def _decode_fn(self, params, pools, page_table, pos, toks):
+        dense = self.kv.gather(pools, page_table)
+        logits, new_dense = self.model.decode_step(params, dense, toks, pos)
+        pools = self.kv.scatter_token(pools, new_dense, page_table, pos)
+        return logits[:, -1], pools
+
+    def _sample(self, logits_row, temperature: float) -> int:
+        if temperature <= 0:
+            return int(np.argmax(logits_row))
+        self.rng, k = jax.random.split(self.rng)
+        return int(jax.random.categorical(
+            k, jnp.asarray(logits_row) / temperature))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> bool:
+        """Queue a request; invalid ones are rejected with ``req.error``
+        set (returned ``False``) instead of wedging the queue."""
+        tp = len(req.prompt)
+        if tp == 0:
+            self.sched.reject(req, "empty prompt")
+        elif tp > self.max_len:
+            self.sched.reject(
+                req, f"prompt length {tp} exceeds cache max_len "
+                     f"{self.max_len}")
+        elif (self.kv.blocks_for(min(tp + req.max_new - 1, self.max_len))
+              > self.alloc.capacity):
+            self.sched.reject(
+                req, "page reservation exceeds total cache capacity")
+        else:
+            self.sched.submit(req)
+            return True
+        self._failed.append(req)
+        return False
+
+    def _finish(self, slot: int) -> None:
+        self.sched.release(slot, done=True)
+        self.alloc.free(self.slot_pages[slot])
+        self.slot_pages[slot] = []
+        self.page_table[slot] = 0     # back to the null page
+        self.pos[slot] = 0
+        self.last_tok[slot] = 0
+
+    def _maybe_finish(self, slot: int) -> None:
+        req = self.sched.slots[slot]
+        # pos == max_len -> no room to write the last sampled token's KV;
+        # every position [0, max_len) has been used (no early cutoff)
+        if len(req.out) >= req.max_new or self.pos[slot] >= self.max_len:
+            self._finish(slot)
+
+    def _admit(self) -> List[Tuple[Request, int]]:
+        """Fill free slots from the queue (strict FIFO).  Each admission
+        prefills batch-1 into the slot's own pages and emits the first
+        token from the prefill logits."""
+        ems: List[Tuple[Request, int]] = []
+        while True:
+            req = self.sched.next_queued()
+            if req is None:
+                break
+            slot = self.sched.free_slot()
+            if slot is None:
+                break
+            tp = len(req.prompt)
+            need = self.kv.blocks_for(min(tp + req.max_new - 1,
+                                          self.max_len))
+            pages = self.alloc.alloc(need)
+            if pages is None:        # wait for active slots to free pages
+                break
+            self.sched.bind(slot, req)
+            self.slot_pages[slot] = pages
+            self.page_table[slot] = 0
+            self.page_table[slot, :len(pages)] = pages
+            logits, cache = self._prefill(
+                self.params, {"tokens": jnp.asarray([req.prompt], jnp.int32)})
+            self.pools = self.kv.write_prefill(self.pools, pages, cache, tp)
+            self.pos[slot] = tp
+            tok = self._sample(np.asarray(logits)[0, -1], req.temperature)
+            req.out.append(tok)
+            self.last_tok[slot, 0] = tok
+            ems.append((req, tok))
+            self._maybe_finish(slot)
+        return ems
+
+    def step_once(self) -> List[Tuple[Request, int]]:
+        """Admit what fits, then run one batched decode step.  Returns the
+        ``(request, token)`` emissions of this call."""
+        ems = self._admit()
+        active = self.sched.active
+        if not active:
+            return ems
+        logits, self.pools = self._step(
+            self.params, self.pools, jnp.asarray(self.page_table),
+            jnp.asarray(self.pos), jnp.asarray(self.last_tok))
+        logits = np.asarray(logits)              # (B, vocab) float32
+        for s in active:
+            self.pos[s] += 1                     # each wrote its last token
+        for s in active:
+            req = self.sched.slots[s]
+            tok = self._sample(logits[s], req.temperature)
+            req.out.append(tok)
+            self.last_tok[s, 0] = tok
+            ems.append((req, tok))
+            self._maybe_finish(s)
+        return ems
+
+    @property
+    def idle(self) -> bool:
+        return self.sched.n_active == 0 and not self.sched.queue
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request], max_steps: int = 1000
+            ) -> RunReport:
+        """Serve ``requests`` to completion (or ``max_steps``).  The report
+        lists completed, in-flight-unfinished, never-admitted and rejected
+        requests — nothing is silently dropped."""
+        for r in requests:
+            self.submit(r)
+        steps = 0
+        while self.sched.n_active or self.sched.queue:
+            if steps >= max_steps:
+                break
+            self.step_once()
+            steps += 1
+        report = RunReport(
+            steps=steps,
+            completed=[r for r in requests if r.done],
+            unfinished=[self.sched.slots[s] for s in self.sched.active],
+            unserved=self.sched.queued,
+            failed=list(self._failed))
+        if report.truncated:
+            print(f"[serve] max_steps={max_steps} hit: "
+                  f"{len(report.unfinished)} in flight, "
+                  f"{len(report.unserved)} still queued "
+                  f"(uids {[r.uid for r in report.unfinished + report.unserved]})")
+        return report
+
+
+def serial_engine(model, params, *, max_len: int, page_size: int = 8,
+                  rng_seed: int = 0) -> Engine:
+    """The slot-serial reference: one slot, so requests are served strictly
+    one at a time through the *identical* compute path.  Under greedy
+    decoding the batched engine must match this token-for-token."""
+    return Engine(model, params, batch_slots=1, max_len=max_len,
+                  page_size=page_size, rng_seed=rng_seed)

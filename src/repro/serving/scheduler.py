@@ -1,0 +1,91 @@
+"""Request model + slot scheduler for the continuous-batching engine.
+
+Request lifecycle::
+
+    QUEUED --admit--> ACTIVE --finish--> DONE
+    QUEUED --reject (invalid / exceeds cache capacity)--> FAILED
+
+Admission is strict FIFO: the head of the queue is admitted as soon as a
+batch slot is free *and* the allocator can cover its worst-case page
+reservation (``min(prompt_len + max_new - 1, max_len)`` positions — the
+last sampled token is returned but never written, hence the ``- 1``).  No
+head-of-line bypass keeps the schedule deterministic, which is what lets
+the batched engine be compared token-for-token against the slot-serial
+reference.
+
+The scheduler is pure bookkeeping (queue + slot binding + states); the
+engine owns all compute and cache state.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+QUEUED, ACTIVE, DONE, FAILED = "queued", "active", "done", "failed"
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new: int = 16
+    temperature: float = 0.0
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+    error: Optional[str] = None
+    state: str = QUEUED
+
+
+class Scheduler:
+    """FIFO queue + slot table.  ``admissible``/``bind``/``release`` are the
+    only mutations; the engine polls ``next_queued`` each step."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.queue: deque = deque()
+        self.slots: List[Optional[Request]] = [None] * n_slots
+
+    def submit(self, req: Request) -> None:
+        req.state = QUEUED
+        self.queue.append(req)
+
+    def reject(self, req: Request, reason: str) -> None:
+        req.state = FAILED
+        req.error = reason
+        req.done = False
+
+    def next_queued(self) -> Optional[Request]:
+        return self.queue[0] if self.queue else None
+
+    def free_slot(self) -> Optional[int]:
+        for s, r in enumerate(self.slots):
+            if r is None:
+                return s
+        return None
+
+    def bind(self, slot: int, req: Request) -> None:
+        assert self.slots[slot] is None and req is self.queue[0]
+        self.queue.popleft()
+        req.state = ACTIVE
+        self.slots[slot] = req
+
+    def release(self, slot: int, *, done: bool = True) -> Request:
+        req = self.slots[slot]
+        assert req is not None
+        self.slots[slot] = None
+        req.state = DONE if done else QUEUED
+        req.done = done
+        return req
+
+    @property
+    def active(self) -> List[int]:
+        return [s for s, r in enumerate(self.slots) if r is not None]
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active)
+
+    @property
+    def queued(self) -> List[Request]:
+        return list(self.queue)

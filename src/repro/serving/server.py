@@ -1,115 +1,25 @@
-"""Batched serving: fixed-slot continuous batching over prefill/decode.
+"""Back-compat façade for the serving package.
 
-Requests (token prompts) fill batch slots; each engine step decodes one
-token for every active slot; finished slots are refilled from the queue
-(prefill for a single slot re-runs the prompt against that slot's cache
-region).  This is the serve-side counterpart of the decode_32k /
-long_500k dry-run shapes.
+The fixed-slot loop that used to live here had three real bugs — prefill
+rewrote *other* slots' cache entries, ``run`` stomped every slot's position
+with the batch max, and termination ended one token early — all rooted in
+the same missing primitive: per-slot positions.  The rebuilt engine
+(``repro.serving.engine``) fixes them structurally: continuous batching
+with per-slot admission, a paged KV cache with free-list reuse
+(``allocator``/``cache``), one-shot per-request prefill, and flash-decode
+steps masked by a per-slot length vector.
+
+Import from here for the stable entry points; the submodules hold the
+pieces:
+
+* :class:`Engine` / :func:`serial_engine` / :class:`RunReport` — engine
+* :class:`Request` — request dataclass (queue states in ``scheduler``)
+* :class:`PageAllocator` / :class:`PagedKVCache` — cache machinery
 """
-from __future__ import annotations
+from repro.serving.allocator import NULL_PAGE, PageAllocator
+from repro.serving.cache import PagedKVCache
+from repro.serving.engine import Engine, RunReport, serial_engine
+from repro.serving.scheduler import Request, Scheduler
 
-from dataclasses import dataclass, field
-from typing import List, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.models import params as PM
-
-
-@dataclass
-class Request:
-    uid: int
-    prompt: List[int]
-    max_new: int = 16
-    temperature: float = 0.0
-    out: List[int] = field(default_factory=list)
-    done: bool = False
-
-
-class Engine:
-    def __init__(self, model, params, *, batch_slots: int, max_len: int,
-                 rng_seed: int = 0):
-        self.model = model
-        self.params = params
-        self.b = batch_slots
-        self.max_len = max_len
-        cache_defs = model.cache_defs(batch_slots, max_len)
-        # the KV cache must start ZEROED: a fresh (or refilled) slot
-        # attends positions it never wrote, and any non-zero init there
-        # leaks into its logits.  This used to go through the *weight*
-        # initializer (PM.materialize with a hardcoded PRNGKey(0)) and was
-        # only correct because every cache ParamDef happens to carry
-        # init="zeros" — a convention one new cache leaf could silently
-        # break.  Build the zeros structurally instead; no RNG involved.
-        self.cache = jax.tree.map(
-            lambda d: jnp.zeros(d.shape, d.dtype), cache_defs,
-            is_leaf=PM.is_def)
-        self.pos = np.zeros(batch_slots, np.int32)      # per-slot next pos
-        self.slot_req: List[Optional[Request]] = [None] * batch_slots
-        self.rng = jax.random.PRNGKey(rng_seed)
-        self._decode = jax.jit(model.decode_step)
-        self._last_tok = np.zeros((batch_slots, 1), np.int32)
-
-    # ------------------------------------------------------------------
-    def _prefill_slot(self, slot: int, req: Request):
-        """Feed the prompt token-by-token through decode_step for this slot.
-
-        (A production engine prefills in one shot per slot; slot-wise decode
-        keeps the cache layout identical and is plenty for tests/examples.)"""
-        for i, t in enumerate(req.prompt):
-            toks = self._last_tok.copy()
-            toks[slot, 0] = t
-            # decode advances every slot's cache at its own position — we run
-            # the engine step only when all slots are aligned, so here we use
-            # a masked single-slot step: position = this slot's pos.
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(toks),
-                jnp.int32(self.pos[slot]))
-            self.pos[slot] += 1
-        self._last_tok[slot, 0] = req.prompt[-1]
-
-    def _sample(self, logits, temperature):
-        if temperature <= 0:
-            return int(jnp.argmax(logits))
-        self.rng, k = jax.random.split(self.rng)
-        return int(jax.random.categorical(k, logits / temperature))
-
-    # ------------------------------------------------------------------
-    def run(self, requests: List[Request], max_steps: int = 1000):
-        queue = list(requests)
-        active = 0
-        # fill slots
-        for s in range(self.b):
-            if queue:
-                req = queue.pop(0)
-                self.slot_req[s] = req
-                self._prefill_slot(s, req)
-                active += 1
-
-        step = 0
-        while (active or queue) and step < max_steps:
-            step += 1
-            pos = int(self.pos.max())
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(self._last_tok),
-                jnp.int32(pos))
-            self.pos[:] = pos + 1
-            logits = np.asarray(logits[:, -1])
-            for s, req in enumerate(self.slot_req):
-                if req is None or req.done:
-                    continue
-                tok = self._sample(jnp.asarray(logits[s]), req.temperature)
-                req.out.append(tok)
-                self._last_tok[s, 0] = tok
-                if len(req.out) >= req.max_new or pos + 1 >= self.max_len - 1:
-                    req.done = True
-                    active -= 1
-                    self.slot_req[s] = None
-                    if queue:   # refill the slot
-                        nreq = queue.pop(0)
-                        self.slot_req[s] = nreq
-                        self._prefill_slot(s, nreq)
-                        active += 1
-        return requests
+__all__ = ["Engine", "RunReport", "Request", "Scheduler", "PageAllocator",
+           "PagedKVCache", "serial_engine", "NULL_PAGE"]
