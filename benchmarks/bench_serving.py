@@ -16,13 +16,18 @@ stream is then served twice through the *identical* compute path:
 Rows (BENCH_serving.json, benchlib schema):
 
 * ``us_per_call`` — mean per-token latency in µs, where a token's latency
-  is the wall-clock gap since the request's previous emission (arrival for
-  the first token — i.e. queueing shows up in the tail);
+  is the wall-clock gap since the request's previous emission (submission
+  for the first token — i.e. queueing shows up in the tail);
 * ``derived``    — end-to-end decode throughput, tokens/s;
-* meta          — ``p50_ms`` / ``p99_ms`` per-token latency percentiles,
-  ``n_tokens``, ``n_requests``, ``batch_slots`` and the ``backend`` label
-  (``xla`` einsum fallback, or ``pallas`` / ``pallas_interp`` — interpret
-  mode is labelled, never silently timed as a compiled kernel).
+* meta          — TTFT and decode-step percentiles reported *separately*
+  (``ttft_p50_ms`` / ``ttft_p99_ms`` measure submission -> first token,
+  i.e. queueing + prefill; ``decode_p50_ms`` / ``decode_p99_ms`` measure
+  the steady-state gap between a request's consecutive tokens — mixing
+  the two in one distribution made p99 track prefill, not decode),
+  ``n_tokens``, ``n_requests``, ``preemptions``, ``batch_slots`` and the
+  ``backend`` label (``xla`` einsum fallback, or ``pallas`` /
+  ``pallas_interp`` — interpret mode is labelled, never silently timed as
+  a compiled kernel).
 
 Engines are warmed on the same prompt-length set and ``reset()`` before the
 timed run, so compile time never lands in a latency percentile.
@@ -80,14 +85,20 @@ def _workload(cfg, n_requests: int, seed: int = 0):
 
 def _clone(reqs):
     return [Request(uid=r.uid, prompt=list(r.prompt), max_new=r.max_new,
-                    temperature=r.temperature) for r in reqs]
+                    temperature=r.temperature, top_k=r.top_k,
+                    top_p=r.top_p, seed=r.seed) for r in reqs]
 
 
 def _drive(engine: Engine, reqs, arrivals):
     """Open-loop serve: submit each request at its arrival time, step until
-    drained.  Returns (per-token latencies [s], elapsed [s], n_tokens)."""
-    lat = []
+    drained.  Returns (ttft [s], decode gaps [s], elapsed [s], n_tokens,
+    preemptions) — a request's *first* emission measures submission ->
+    first token (queueing + prefill, the TTFT distribution); subsequent
+    emissions measure the steady-state decode-step gap.  The two are kept
+    apart: one mixed distribution makes p99 track prefill, not decode."""
+    ttft, decode = [], []
     last = {}                      # uid -> wall time of previous emission
+    seen = set()                   # uids that emitted their first token
     pending = list(zip(reqs, arrivals))
     t0 = time.time()
     while pending or not engine.idle:
@@ -103,9 +114,11 @@ def _drive(engine: Engine, reqs, arrivals):
         ems = engine.step_once()
         t = time.time()
         for req, _tok in ems:
-            lat.append(t - last[req.uid])
+            (decode if req.uid in seen else ttft).append(t - last[req.uid])
+            seen.add(req.uid)
             last[req.uid] = t
-    return lat, time.time() - t0, len(lat)
+    n_pre = sum(r.preemptions for r in reqs)
+    return ttft, decode, time.time() - t0, len(ttft) + len(decode), n_pre
 
 
 def _bench_engine(engine: Engine, reqs, arrivals):
@@ -118,17 +131,22 @@ def _bench_engine(engine: Engine, reqs, arrivals):
     best = None
     for _ in range(2):
         engine.reset()
-        lat, elapsed, n = _drive(engine, _clone(reqs), arrivals)
-        if best is None or n / elapsed > best[2] / best[1]:
-            best = (lat, elapsed, n)
-    lat, elapsed, n = best
-    lat_ms = np.asarray(lat) * 1e3
+        r = _drive(engine, _clone(reqs), arrivals)
+        if best is None or r[3] / r[2] > best[3] / best[2]:
+            best = r
+    ttft, decode, elapsed, n, n_pre = best
+    ttft_ms = np.asarray(ttft) * 1e3
+    dec_ms = np.asarray(decode) * 1e3
+    all_ms = np.concatenate([ttft_ms, dec_ms])
     return {
-        "us_per_call": float(np.mean(lat_ms) * 1e3),
+        "us_per_call": float(np.mean(all_ms) * 1e3),
         "derived": n / elapsed,                        # tokens/s
-        "meta": {"p50_ms": float(np.percentile(lat_ms, 50)),
-                 "p99_ms": float(np.percentile(lat_ms, 99)),
+        "meta": {"ttft_p50_ms": float(np.percentile(ttft_ms, 50)),
+                 "ttft_p99_ms": float(np.percentile(ttft_ms, 99)),
+                 "decode_p50_ms": float(np.percentile(dec_ms, 50)),
+                 "decode_p99_ms": float(np.percentile(dec_ms, 99)),
                  "n_tokens": n, "n_requests": len(reqs),
+                 "preemptions": n_pre,
                  "batch_slots": engine.b,
                  "backend": _backend_label()},
     }

@@ -86,6 +86,16 @@ def validate_rows(payload: dict) -> dict:
                     f"row {row['name']!r}: {field} = {v!r} is not finite")
         if row["us_per_call"] < 0:
             raise ValueError(f"row {row['name']!r}: negative us_per_call")
+        if payload["suite"] == "serving":
+            # TTFT (queueing + prefill) and decode-step latency are separate
+            # distributions; a serving row must carry both percentile pairs
+            for field in ("ttft_p50_ms", "ttft_p99_ms",
+                          "decode_p50_ms", "decode_p99_ms"):
+                v = row.get(field)
+                if not isinstance(v, (int, float)) or not math.isfinite(v):
+                    raise ValueError(
+                        f"serving row {row['name']!r}: {field} = {v!r} "
+                        f"is not a finite latency")
     return payload
 
 

@@ -140,6 +140,7 @@ def candidates(kernel: str, shape) -> List[dict]:
       rotate_rescale  (d_in, d_out)
       update_chain    (d_in, d_out)
       patch_factor    (t_out, c, taps, stride)
+      flash_decode_paged (b, hq, hkv, hd, max_blocks, page_size)
     """
     if kernel == "factor_update":
         n, d = shape
@@ -163,6 +164,16 @@ def candidates(kernel: str, shape) -> List[dict]:
         t_out, c, taps, stride = shape
         return [{"bt": bt} for bt in (64, 128, 256, 512)
                 if bt <= t_out and t_out % bt == 0 and taps <= bt * stride]
+    if kernel == "flash_decode_paged":
+        # q-head block: heads of one KV group share the streamed page, so
+        # bh > 1 amortizes the per-page DMA across the group.  Legal bh
+        # divide the GQA group size (block index maps stay group-pure).
+        b, hq, hkv, hd, nb, page = shape
+        group = hq // max(hkv, 1)
+        if hd % 8 != 0 or hkv == 0 or hq % hkv != 0:
+            return []
+        return [{"bh": bh} for bh in (1, 2, 4, 8, 16)
+                if bh <= group and group % bh == 0]
     return []
 
 
@@ -241,6 +252,21 @@ def _make_runner(kernel: str, shape, dtype, interpret: bool,
             x, old, taps=taps, stride=stride, t_out=t_out, alpha=0.05,
             beta=0.95, interpret=interpret, **cfg))
         return lambda: f(x, old)
+    if kernel == "flash_decode_paged":
+        from repro.kernels.flash_decode import flash_decode_paged
+        b, hq, hkv, hd, nb, page = shape
+        num_pages = 1 + b * nb
+        q, kp, vp = _bench_inputs(
+            6, [(b, hq, hd), (num_pages, page, hkv, hd),
+                (num_pages, page, hkv, hd)], [dtype] * 3)
+        rs = jax.random.split(jax.random.PRNGKey(7), 1)[0]
+        pt = jax.random.permutation(
+            rs, jnp.arange(1, num_pages, dtype=jnp.int32)
+        )[:b * nb].reshape(b, nb)
+        lens = jnp.full((b,), nb * page, jnp.int32)
+        f = jax.jit(lambda q, kp, vp, lens, pt: flash_decode_paged(
+            q, kp, vp, lens, pt, interpret=interpret, **cfg))
+        return lambda: f(q, kp, vp, lens, pt)
     raise KeyError(f"no autotune runner for kernel {kernel!r}")
 
 

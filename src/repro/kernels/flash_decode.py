@@ -15,6 +15,17 @@ backend (compiled on TPU, interpreter elsewhere), so a direct caller can
 never silently run the interpreter on a compiled backend; the jit'd
 dispatch layer (``kernels.ops``) threads its ``_STATE`` explicitly like the
 other kernels.
+
+``flash_decode_paged`` is the block-indexed paged-attention variant
+(PagedAttention/vLLM shape): K/V live in a physical page pool
+``(num_pages, page_size, hkv, hd)`` shared by every slot, and each row's
+``(max_blocks,)`` page-table row rides in as a *second* scalar-prefetch
+operand.  The grid's innermost dimension walks the row's logical pages and
+the K/V BlockSpec index maps read the page table to DMA each physical page
+in place — no dense ``(B, S_view)`` gather view is ever materialized.
+Per-row valid lengths, the sliding window and the softcap behave exactly as
+in the dense kernel, so the two are differentially testable against the
+same einsum oracle.
 """
 from __future__ import annotations
 
@@ -116,4 +127,111 @@ def flash_decode(q, k, v, lengths, *, bk: int = 128, window: int = 0,
         out_shape=jax.ShapeDtypeStruct((b, hq, hd), q.dtype),
         interpret=interpret,
     )(lengths, q, k, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# block-indexed paged attention
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(len_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale, n_blocks, page, window,
+                  cap):
+    bb = pl.program_id(0)
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                 # (bh, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)           # (page, hd)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    bh = q.shape[0]
+    k_pos = ib * page + jax.lax.broadcasted_iota(jnp.int32, (bh, page), 1)
+    length = len_ref[bb]
+    valid = k_pos < length                           # beyond-length pages are
+    if window:                                       # null/stale: masked out
+        valid &= k_pos >= length - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * corr
+                    + jnp.dot(p, v_ref[0, :, 0].astype(jnp.float32),
+                              preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ib == n_blocks - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode_paged(q, k_pool, v_pool, lengths, page_table, *, bh: int = 1,
+                       window: int = 0, cap: float = 0.0, interpret=None):
+    """Paged decode: one query token per row against a shared page pool.
+
+    q: (B, Hq, hd); k_pool, v_pool: (num_pages, page_size, Hkv, hd);
+    lengths: (B,) int32 valid-entry counts; page_table: (B, max_blocks)
+    int32 rows of physical page ids (unused tail entries must point at a
+    masked page, e.g. the allocator's null page 0).  Returns (B, Hq, hd).
+
+    Both the length vector and the page table ride in as scalar-prefetch
+    operands: the grid's innermost dim walks each row's ``max_blocks``
+    logical pages, and the K/V index maps look the physical page up in the
+    table, so each step DMAs exactly one ``(page_size, hd)`` page — no
+    gathered dense view exists anywhere.  ``bh`` is the tunable q-head
+    block: heads of one KV group share the streamed pages, so ``bh > 1``
+    amortizes the page DMA across the group (autotuner coverage:
+    ``candidates("flash_decode_paged", ...)``).
+    """
+    b, hq, hd = q.shape
+    num_pages, page, hkv, _ = k_pool.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    assert group % bh == 0 and bh <= group, (bh, group)
+    n_blocks = page_table.shape[1]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1),
+                               (b,))
+    page_table = jnp.asarray(page_table, jnp.int32)
+    grid = (b, hq // bh, n_blocks)
+    kernel = functools.partial(_paged_kernel, scale=1.0 / math.sqrt(hd),
+                               n_blocks=n_blocks, page=page,
+                               window=int(window), cap=float(cap))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bh, hd),
+                             lambda bb, jh, ib, lens, pt: (bb, jh, 0)),
+                pl.BlockSpec((1, page, 1, hd),
+                             lambda bb, jh, ib, lens, pt, g=group, h=bh:
+                             (pt[bb, ib], 0, (jh * h) // g, 0)),
+                pl.BlockSpec((1, page, 1, hd),
+                             lambda bb, jh, ib, lens, pt, g=group, h=bh:
+                             (pt[bb, ib], 0, (jh * h) // g, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bh, hd),
+                                   lambda bb, jh, ib, lens, pt: (bb, jh, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bh, 1), jnp.float32),
+                pltpu.VMEM((bh, 1), jnp.float32),
+                pltpu.VMEM((bh, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, hd), q.dtype),
+        interpret=interpret,
+    )(lengths, page_table, q, k_pool, v_pool)
     return out

@@ -62,21 +62,15 @@ def precondition(a_inv, v, g_inv):
     return _ref.precondition_ref(a_inv, v, g_inv)
 
 
-def flash_decode(q, k, v, lengths, *, bk=128, window=0, cap=0.0):
-    """One-token decode vs a long cache: (B,Hq,hd) x (B,Hkv,S,hd).
-
-    ``lengths`` is a ``(B,)`` int32 vector of per-row valid cache entries
-    (a scalar broadcasts): continuous-batching slots decode at different
-    positions, so each row masks its own ``[0, len_b)`` prefix —
-    ``[len_b - window, len_b)`` when ``window`` > 0 (gemma2 local layers);
-    ``cap`` > 0 soft-caps the attention scores."""
+def flash_decode_ref(q, k, v, lengths, *, window=0, cap=0.0):
+    """The masked-einsum decode oracle: (B,Hq,hd) x (B,Hkv,S,hd) with
+    per-row ``[0, len_b)`` (optionally windowed, softcapped) masking.  The
+    XLA fallback of ``flash_decode`` *and* the differential reference both
+    the dense and the paged Pallas kernels are tested against."""
     b, hq, hd = q.shape
+    hkv, s_len = k.shape[1], k.shape[2]
     lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1),
                                (b,))
-    if enabled() and k.shape[2] % bk == 0 and q.shape[-1] % 8 == 0:
-        return _fd.flash_decode(q, k, v, lengths, bk=bk, window=window,
-                                cap=cap, interpret=_STATE["interpret"])
-    hkv, s_len = k.shape[1], k.shape[2]
     g = hq // hkv
     qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
     sc = jnp.einsum("bhgd,bhsd->bhgs", qg, k.astype(jnp.float32))
@@ -91,6 +85,68 @@ def flash_decode(q, k, v, lengths, *, bk=128, window=0, cap=0.0):
     p = jax.nn.softmax(sc, -1)
     out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
     return out.reshape(b, hq, hd).astype(q.dtype)
+
+
+def flash_decode(q, k, v, lengths, *, bk=128, window=0, cap=0.0):
+    """One-token decode vs a long cache: (B,Hq,hd) x (B,Hkv,S,hd).
+
+    ``lengths`` is a ``(B,)`` int32 vector of per-row valid cache entries
+    (a scalar broadcasts): continuous-batching slots decode at different
+    positions, so each row masks its own ``[0, len_b)`` prefix —
+    ``[len_b - window, len_b)`` when ``window`` > 0 (gemma2 local layers);
+    ``cap`` > 0 soft-caps the attention scores."""
+    b = q.shape[0]
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1),
+                               (b,))
+    if enabled() and k.shape[2] % bk == 0 and q.shape[-1] % 8 == 0:
+        return _fd.flash_decode(q, k, v, lengths, bk=bk, window=window,
+                                cap=cap, interpret=_STATE["interpret"])
+    return flash_decode_ref(q, k, v, lengths, window=window, cap=cap)
+
+
+def paged_gather(k_pool, v_pool, page_table):
+    """Materialize the dense ``(B, Hkv, S_view, hd)`` gather view of a page
+    pool — the serving engine's *oracle* decode route (and the paged
+    kernel's differential reference), no longer its hot path."""
+    nb = page_table.shape[1]
+    num_pages, page, hkv, hd = k_pool.shape
+    b = page_table.shape[0]
+
+    def one(pool):
+        g = jnp.take(pool, page_table, axis=0)       # (B, nb, P, hkv, hd)
+        return g.reshape(b, nb * page, hkv, hd).transpose(0, 2, 1, 3)
+
+    return one(k_pool), one(v_pool)
+
+
+def flash_decode_paged(q, k_pool, v_pool, lengths, page_table, *, window=0,
+                       cap=0.0, tune_mode: str = "off"):
+    """Block-indexed paged decode: (B,Hq,hd) against a shared page pool
+    ``(num_pages, page_size, Hkv, hd)`` through each row's ``(max_blocks,)``
+    page-table row.  The Pallas route walks the pages in place (page table
+    as a scalar-prefetch operand — no dense gather view); the XLA fallback
+    gathers the view and runs the einsum oracle, so fallback == oracle by
+    construction.  ``tune_mode`` threads the autotuner (``REPRO_AUTOTUNE``
+    env overrides) for the q-head block ``bh``."""
+    b, hq, hd = q.shape
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1),
+                               (b,))
+    page_table = jnp.asarray(page_table, jnp.int32)
+    if enabled() and hd % 8 == 0:
+        kw = {}
+        from repro.kernels import autotune as _at
+        hkv, page = k_pool.shape[2], k_pool.shape[1]
+        cfg = _at.tuned("flash_decode_paged",
+                        (b, hq, hkv, hd, page_table.shape[1], page),
+                        q.dtype, interpret=_STATE["interpret"],
+                        mode=tune_mode)
+        if cfg:
+            kw.update(cfg)
+        return _fd.flash_decode_paged(q, k_pool, v_pool, lengths, page_table,
+                                      window=window, cap=cap,
+                                      interpret=_STATE["interpret"], **kw)
+    kd, vd = paged_gather(k_pool, v_pool, page_table)
+    return flash_decode_ref(q, kd, vd, lengths, window=window, cap=cap)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, cap=0.0):

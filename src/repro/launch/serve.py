@@ -1,6 +1,11 @@
 """Serving launcher: continuous batching over the paged-KV engine.
 
-  python -m repro.launch.serve --arch smollm-135m --reduced --requests 6
+  python -m repro.launch.serve --arch smollm-135m --reduced --requests 6 \\
+      --temperature 0.8 --top_k 40 --seed 7
+
+The default decode route is block-indexed paged attention
+(``--decode_route gather`` selects the dense-gather oracle for debugging);
+``--num_pages`` shrinks the page pool to exercise eviction/preemption.
 """
 from __future__ import annotations
 
@@ -10,7 +15,7 @@ import jax
 
 from repro.configs import get_config, get_reduced_config
 from repro.models.lm import LM
-from repro.serving.server import Engine, Request
+from repro.serving.server import DECODE_ROUTES, Engine, Request
 
 
 def main(argv=None):
@@ -21,24 +26,43 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max_len", type=int, default=128)
     ap.add_argument("--max_new", type=int, default=8)
+    ap.add_argument("--decode_route", choices=DECODE_ROUTES, default="paged")
+    ap.add_argument("--page_size", type=int, default=8)
+    ap.add_argument("--num_pages", type=int, default=None,
+                    help="page pool size; small values force "
+                         "eviction/preemption under load")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 samples")
+    ap.add_argument("--top_k", type=int, default=0)
+    ap.add_argument("--top_p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=None,
+                    help="per-request sampling seed base (request i uses "
+                         "seed+i); omit for the engine-shared RNG")
     args = ap.parse_args(argv)
 
     cfg = (get_reduced_config(args.arch) if args.reduced
            else get_config(args.arch))
     lm = LM(cfg)
     params = lm.init_params(jax.random.PRNGKey(0))
-    eng = Engine(lm, params, batch_slots=args.slots, max_len=args.max_len)
+    eng = Engine(lm, params, batch_slots=args.slots, max_len=args.max_len,
+                 page_size=args.page_size, num_pages=args.num_pages,
+                 decode_route=args.decode_route)
     reqs = [Request(uid=i, prompt=[(7 * i + j) % cfg.vocab_size
                                    for j in range(4 + i % 3)],
-                    max_new=args.max_new, temperature=0.0 if i % 2 else 0.8)
+                    max_new=args.max_new, temperature=args.temperature,
+                    top_k=args.top_k, top_p=args.top_p,
+                    seed=None if args.seed is None else args.seed + i)
             for i in range(args.requests)]
     rep = eng.run(reqs)
     for r in reqs:
-        print(f"[serve] req {r.uid}: prompt={r.prompt} -> out={r.out}")
+        tag = f" (preempted x{r.preemptions})" if r.preemptions else ""
+        print(f"[serve] req {r.uid}: prompt={r.prompt} -> out={r.out}{tag}")
     assert all(r.done or r.out for r in reqs)
-    print(f"[serve] {rep.steps} steps: {len(rep.completed)} completed, "
+    print(f"[serve] {rep.steps} steps ({args.decode_route} route): "
+          f"{len(rep.completed)} completed, "
           f"{len(rep.unfinished)} in flight, {len(rep.unserved)} queued, "
-          f"{len(rep.failed)} rejected")
+          f"{len(rep.failed)} rejected; {rep.preemptions} preemptions, "
+          f"{eng.alloc.n_evicted} pages evicted")
     return rep
 
 

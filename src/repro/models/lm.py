@@ -383,7 +383,8 @@ class LM:
     # block application (shared by train / prefill / decode)
     # ------------------------------------------------------------------
     def _attn(self, tg, name, p, x, positions, *, window, cache=None,
-              decode_pos=None, build_cache=False, causal=True, kv_x=None):
+              decode_pos=None, build_cache=False, causal=True, kv_x=None,
+              page_table=None):
         cfg = self.cfg
         bsz, t, _ = x.shape
         hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -416,6 +417,25 @@ class LM:
         new_cache = None
         kv_valid = None
         q_offset = None
+        if cache is not None and page_table is not None:
+            # block-indexed paged decode: scatter this token's K/V straight
+            # into its physical page (page = table[b, pos//P], offset =
+            # pos%P; idle rows land on the allocator's null page), then
+            # attend the page pool in place through the page table — the
+            # dense (B, S_view) gather view is never materialized.
+            assert t == 1, "paged decode is one token per row"
+            page_size = cache["k"].shape[1]
+            page = jnp.take_along_axis(
+                page_table, (decode_pos // page_size)[:, None], axis=1)[:, 0]
+            off = decode_pos % page_size
+            ck = cache["k"].at[page, off].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[page, off].set(v[:, 0].astype(cache["v"].dtype))
+            o = ops.flash_decode_paged(q[:, 0], ck, cv, decode_pos + 1,
+                                       page_table, window=window,
+                                       cap=cfg.attn_softcap)
+            o = o[:, None].astype(x.dtype)
+            o = dense(tg, f"{name}.o", p["wo"], o.reshape(bsz, t, hq * hd))
+            return o, {"k": ck, "v": cv}
         if cache is not None:          # decode: splice into cache, per row
             # decode_pos is a (B,) vector — continuous-batching slots sit at
             # *different* positions, so each row splices at its own offset
@@ -479,7 +499,7 @@ class LM:
 
     def _apply_block(self, spec: BlockSpec, p, tg: Tagger, h, positions,
                      enc_out=None, cache=None, decode_pos=None,
-                     build_cache=False):
+                     build_cache=False, page_table=None):
         cfg = self.cfg
         name = f"blk{spec.pos}"
         aux = jnp.float32(0.0)
@@ -516,7 +536,8 @@ class LM:
                                 window=window,
                                 cache=None if cache is None else
                                 {"k": cache["k"], "v": cache["v"]},
-                                decode_pos=decode_pos, build_cache=build_cache)
+                                decode_pos=decode_pos, build_cache=build_cache,
+                                page_table=page_table)
             h = h + o
             if kvc is not None:
                 new_cache.update(kvc)
@@ -801,10 +822,18 @@ class LM:
             cache["enc_out"] = enc_out
         return logits, cache
 
-    def decode_step(self, params, cache, tokens, pos):
+    def decode_step(self, params, cache, tokens, pos, page_table=None):
         """One decode step. tokens: (B, 1); pos: scalar int32 position, or a
         ``(B,)`` vector of *per-slot* positions (continuous batching: each
-        slot splices and attends at its own offset)."""
+        slot splices and attends at its own offset).
+
+        With ``page_table`` (a ``(B, max_blocks)`` int32 block table) the
+        cache leaves are *page pools* ``(ng, num_pages, page_size, hkv,
+        hd)`` shared by all rows: each attention layer scatters its one new
+        KV row into the slot's physical page and attends block-indexed
+        through the table (``ops.flash_decode_paged``) — no dense per-row
+        cache view is built.  Without it the leaves are the dense
+        ``(ng, B, S, hkv, hd)`` caches, spliced and attended as before."""
         cfg = self.cfg
         params = self._cast_params(params)
         tg = Tagger("plain")
@@ -828,7 +857,8 @@ class LM:
                 h, _, c = self._apply_block(spec, bp[pos_i], tg, h, positions,
                                             enc_out=enc_out,
                                             cache=cs[f"pos{pos_i}"],
-                                            decode_pos=pos_vec)
+                                            decode_pos=pos_vec,
+                                            page_table=page_table)
                 new_cs[f"pos{pos_i}"] = c
             return h, new_cs
 

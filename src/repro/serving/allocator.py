@@ -9,6 +9,13 @@ Page 0 is *reserved* as the null page: idle batch rows point their page
 table at it, so their (masked, garbage) decode writes can never land inside
 a live slot's allocation — the cross-slot cache-corruption class of bug is
 structurally impossible rather than merely avoided.
+
+Eviction: under memory pressure the engine preempts a victim request and
+reclaims its pages through ``evict`` — same free-list return and the same
+double-free / reserved-page guards as ``free`` (a reserved page can never
+be evicted), but counted separately (``n_evicted``) so preemption pressure
+is observable.  Evicted pages re-enter the FIFO free list, so page reuse
+stays deterministic under preemption too.
 """
 from __future__ import annotations
 
@@ -32,6 +39,7 @@ class PageAllocator:
         self._free = deque(p for p in range(num_pages)
                            if p not in self.reserved)
         self._held: set = set()
+        self.n_evicted = 0
 
     @property
     def capacity(self) -> int:
@@ -73,3 +81,10 @@ class PageAllocator:
         for p in pages:
             self._held.discard(p)
             self._free.append(p)
+
+    def evict(self, pages: Sequence[int]) -> None:
+        """Reclaim a preempted request's pages.  Identical guards and
+        free-list return as ``free`` (a reserved page can never be
+        evicted), counted in ``n_evicted``."""
+        self.free(pages)
+        self.n_evicted += len(pages)

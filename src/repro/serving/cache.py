@@ -10,14 +10,19 @@ page table row lists the physical pages backing its logical positions in
 order, and that same row indexes every layer's pools — exactly the
 vLLM-style block table, minus per-layer tables.
 
-The decode step runs against a *dense gathered view*: ``gather`` reorders
-each slot's pages back into logical order, producing the
-``(ng, B, S_view, hkv, hd)`` cache ``model.decode_step`` expects, where
-``S_view = max_blocks * page_size`` is fixed so the step compiles once.
-After the step, ``scatter_token`` writes the one new KV row per slot back
-into its physical page.  Rows whose slot is idle carry a page table of null
-pages (page 0, reserved by the allocator), so their writes never touch a
-live allocation.
+The default decode route is *block-indexed*: ``model.decode_step`` takes
+the pools plus the ``(B, max_blocks)`` page table straight through to
+``ops.flash_decode_paged`` — each layer scatters its one new KV row into
+the slot's physical page and attends the pool in place (page table as a
+scalar-prefetch operand of the Pallas kernel), so no dense per-row view is
+ever materialized on the hot path.  ``gather`` + ``scatter_token`` remain
+as the *oracle route* (``Engine(decode_route="gather")``): pages gathered
+back into the ``(ng, B, S_view, hkv, hd)`` dense cache (``S_view =
+max_blocks * page_size``, fixed so the step compiles once), decode against
+it, one-token scatter back — the einsum/XLA reference the paged route is
+differentially tested against.  Rows whose slot is idle carry a page table
+of null pages (page 0, reserved by the allocator), so their writes never
+touch a live allocation on either route.
 
 Attention never reads stale bytes from a *reused* page: row ``b`` of the
 gathered view is masked to ``[0, len_b)`` by the per-slot length vector
@@ -116,9 +121,13 @@ class PagedKVCache:
         return out
 
     # -- host-side prefill write ------------------------------------------
-    def write_prefill(self, pools, pages, prefill_cache, prompt_len: int):
-        """Write a one-request prefill cache (``(ng, 1, Tp, hkv, hd)``
-        leaves) into the first ``blocks_for(Tp)`` of ``pages``."""
+    def write_prefill(self, pools, pages, prefill_cache, prompt_len: int,
+                      row: int = 0):
+        """Write row ``row`` of a (possibly multi-request) prefill cache
+        (``(ng, B, Tp, hkv, hd)`` leaves) into the first
+        ``blocks_for(prompt_len)`` of ``pages``.  Batched admission prefills
+        several same-length requests in one forward and peels each row into
+        its own slot's pages through this."""
         nb = self.blocks_for(prompt_len)
         if nb > len(pages):
             raise ValueError(f"prompt needs {nb} pages, slot holds "
@@ -131,7 +140,7 @@ class PagedKVCache:
             src = prefill_cache[name]
             new = {}
             for kv in ("k", "v"):
-                x = src[kv]
+                x = src[kv][:, row:row + 1, :prompt_len]
                 x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
                 x = x.reshape(ng, nb, self.page_size, *x.shape[3:])
                 new[kv] = pools[name][kv].at[:, pids].set(

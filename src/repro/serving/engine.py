@@ -2,18 +2,41 @@
 
 Per step, every *active* slot decodes one token at its **own** position
 (``decode_step`` takes the ``(B,)`` position vector straight through to
-``ops.flash_decode``'s per-row length masking); finished slots free their
+the decode kernel's per-row length masking); finished slots free their
 pages and the queue refills them in-flight, without touching any other
-slot's cache:
+slot's cache.
 
-* prefill is a one-shot ``model.prefill`` on just that request (batch 1),
-  written only into the slot's freshly allocated pages — it cannot advance
-  or overwrite another active slot's entries;
-* idle rows ride the batched step against the reserved null page, so their
-  masked garbage writes also can't land in a live allocation;
-* a slot only ever attends ``[0, its_len)`` — the per-slot length vector is
-  the mask, so zeroed/stale cache beyond a slot's length never pollutes its
-  softmax.
+Decode routes (``decode_route``):
+
+* ``"paged"`` (default) — block-indexed paged attention: the page table
+  rides into ``model.decode_step`` and each attention layer scatters its
+  one new KV row into the slot's physical page and attends the pool in
+  place (``ops.flash_decode_paged``, page table as a scalar-prefetch
+  operand).  No dense ``(B, S_view)`` gather view exists on the hot path.
+* ``"gather"`` — the einsum/XLA *oracle*: gather pages into the dense
+  view, decode against it, scatter the one new row back.  Retained for
+  differential testing (``tests/test_serving.py`` pins paged == gather),
+  not as a serving configuration.
+
+Admission & memory pressure: a request is admitted with only its *prompt*
+pages (``blocks_for(prompt_len)``) — no worst-case ``max_new``
+reservation.  Decode growth allocates one page on demand whenever a slot's
+next position crosses a page boundary; if the pool is exhausted the engine
+preempts the **youngest** active request (possibly the requester itself),
+evicts its pages back to the free list and re-queues it at the queue
+front.  Victims recompute from scratch on re-admission — greedy decoding
+and the seeded sampler (``serving/sampling.py``) are pure functions of
+(request, token index), so the re-run reproduces the identical token
+stream.  ``submit`` still rejects requests whose worst-case footprint
+exceeds *total* capacity, which is what guarantees the oldest active
+request can always make progress (no preemption livelock).
+
+Prefill is batched: all requests admitted in one step are grouped by
+prompt length and prefilled in a single forward per group (batch padded to
+a power-of-two bucket with duplicate rows so the jit cache stays small);
+each row is then written into its own slot's pages.  Grouping by *exact*
+length keeps every row's computation identical to its batch-1 prefill, so
+batched-vs-serial token parity is preserved.
 
 Termination: a cache of ``max_len`` yields exactly ``max_len`` usable
 positions — a prompt of ``Tp`` tokens can emit up to ``max_len - Tp + 1``
@@ -23,7 +46,8 @@ requests still in flight or queued when ``max_steps`` is hit.
 
 The slot-serial reference engine (``serial_engine`` / ``batch_slots=1``)
 runs the identical compute path one request at a time; under greedy
-decoding the batched engine must match it token-for-token.
+decoding the batched engine must match it token-for-token — including
+under eviction pressure (tiny page pools forcing mid-decode preemption).
 """
 from __future__ import annotations
 
@@ -34,21 +58,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving import sampling
 from repro.serving.allocator import PageAllocator
 from repro.serving.cache import PagedKVCache
 from repro.serving.scheduler import Request, Scheduler
+
+DECODE_ROUTES = ("paged", "gather")
 
 
 @dataclass
 class RunReport:
     """What ``Engine.run`` actually did.  ``unfinished`` (in-flight) and
     ``unserved`` (never admitted) are non-empty only when ``max_steps``
-    cut the run short — they are reported, not dropped."""
+    cut the run short — they are reported, not dropped.  ``preemptions``
+    counts eviction events across the served requests."""
     steps: int = 0
     completed: List[Request] = field(default_factory=list)
     unfinished: List[Request] = field(default_factory=list)
     unserved: List[Request] = field(default_factory=list)
     failed: List[Request] = field(default_factory=list)
+    preemptions: int = 0
 
     @property
     def truncated(self) -> bool:
@@ -57,16 +86,21 @@ class RunReport:
 
 class Engine:
     """Continuous-batching engine: FIFO admission into ``batch_slots``
-    in-flight rows, paged KV cache with free-list reuse, one-shot prefill
-    per admitted request, flash-decode batched steps."""
+    in-flight rows, paged KV cache with free-list reuse and
+    eviction/preemption under pressure, grouped batched prefill, and
+    block-indexed paged-attention decode steps."""
 
     def __init__(self, model, params, *, batch_slots: int, max_len: int,
                  page_size: int = 8, num_pages: int = None,
-                 rng_seed: int = 0):
+                 rng_seed: int = 0, decode_route: str = "paged"):
+        if decode_route not in DECODE_ROUTES:
+            raise ValueError(f"decode_route={decode_route!r} not in "
+                             f"{DECODE_ROUTES}")
         self.model = model
         self.params = params
         self.b = batch_slots
         self.max_len = max_len
+        self.decode_route = decode_route
         self.kv = PagedKVCache(model, batch_slots=batch_slots,
                                max_len=max_len, page_size=page_size,
                                num_pages=num_pages)
@@ -78,10 +112,14 @@ class Engine:
                                    np.int32)
         self.last_tok = np.zeros((batch_slots, 1), np.int32)
         self.slot_pages: List[List[int]] = [[] for _ in range(batch_slots)]
+        self.slot_seq = np.zeros(batch_slots, np.int64)  # admission order
+        self._seq = 0
+        self.n_preemptions = 0
         self.rng = jax.random.PRNGKey(rng_seed)
         self._failed: List[Request] = []
         self._prefill = jax.jit(model.prefill)
-        self._step = jax.jit(self._decode_fn)
+        self._step = jax.jit(self._decode_paged if decode_route == "paged"
+                             else self._decode_gather)
 
     # ------------------------------------------------------------------
     @property
@@ -98,26 +136,47 @@ class Engine:
         self.page_table[:] = 0
         self.last_tok[:] = 0
         self.slot_pages = [[] for _ in range(self.b)]
+        self.slot_seq[:] = 0
+        self._seq = 0
+        self.n_preemptions = 0
         self._failed = []
 
     # ------------------------------------------------------------------
-    def _decode_fn(self, params, pools, page_table, pos, toks):
+    def _decode_paged(self, params, pools, page_table, pos, toks):
+        """Block-indexed route: pools + page table straight into the model;
+        the new KV row is scattered inside each attention layer."""
+        logits, pools = self.model.decode_step(params, pools, toks, pos,
+                                               page_table=page_table)
+        return logits[:, -1], pools
+
+    def _decode_gather(self, params, pools, page_table, pos, toks):
+        """Oracle route: dense gather view -> decode -> one-token scatter."""
         dense = self.kv.gather(pools, page_table)
         logits, new_dense = self.model.decode_step(params, dense, toks, pos)
         pools = self.kv.scatter_token(pools, new_dense, page_table, pos)
         return logits[:, -1], pools
 
-    def _sample(self, logits_row, temperature: float) -> int:
-        if temperature <= 0:
+    def _sample(self, req: Request, logits_row) -> int:
+        """One token for ``req``.  Greedy is the PR-7 argmax, bitwise; a
+        seeded request draws token ``len(req.out)`` of its own stream
+        (batch-composition independent, replay-identical after preemption);
+        an unseeded stochastic request keeps the legacy engine-shared RNG."""
+        if req.temperature <= 0:
             return int(np.argmax(logits_row))
-        self.rng, k = jax.random.split(self.rng)
-        return int(jax.random.categorical(
-            k, jnp.asarray(logits_row) / temperature))
+        if req.seed is None:
+            self.rng, k = jax.random.split(self.rng)
+            return int(jax.random.categorical(
+                k, jnp.asarray(logits_row) / req.temperature))
+        return sampling.sample_token(
+            logits_row, temperature=req.temperature, top_k=req.top_k,
+            top_p=req.top_p, seed=req.seed, index=len(req.out))
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> bool:
         """Queue a request; invalid ones are rejected with ``req.error``
-        set (returned ``False``) instead of wedging the queue."""
+        set (returned ``False``) instead of wedging the queue.  The
+        capacity check is against the *total* pool (a request must be able
+        to run alone) — admission itself reserves only prompt pages."""
         tp = len(req.prompt)
         if tp == 0:
             self.sched.reject(req, "empty prompt")
@@ -150,11 +209,46 @@ class Engine:
         if len(req.out) >= req.max_new or self.pos[slot] >= self.max_len:
             self._finish(slot)
 
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot``'s request: pages back to the free list, request
+        to the queue front (FIFO-preserving), emitted tokens discarded —
+        the re-run recomputes the identical stream from scratch."""
+        self.sched.preempt(slot)
+        self.alloc.evict(self.slot_pages[slot])
+        self.slot_pages[slot] = []
+        self.page_table[slot] = 0
+        self.pos[slot] = 0
+        self.last_tok[slot] = 0
+        self.n_preemptions += 1
+
+    def _grow(self) -> None:
+        """Page-on-demand: before the decode step, every active slot must
+        own the page backing the position it is about to write.  Oldest
+        slots grow first; under exhaustion the youngest active request is
+        preempted (possibly the requester itself, which then waits for the
+        older ones — the FIFO head can always make progress)."""
+        order = sorted(self.sched.active, key=lambda s: self.slot_seq[s])
+        for slot in order:
+            while (self.sched.slots[slot] is not None
+                   and len(self.slot_pages[slot])
+                   < self.kv.blocks_for(int(self.pos[slot]) + 1)):
+                got = self.alloc.alloc(1)
+                if got is not None:
+                    self.page_table[slot, len(self.slot_pages[slot])] = got[0]
+                    self.slot_pages[slot].append(got[0])
+                    continue
+                victim = max(self.sched.active,
+                             key=lambda s: self.slot_seq[s])
+                self._preempt(victim)
+                if victim == slot:
+                    break             # self-preempted: sit out this step
+
     def _admit(self) -> List[Tuple[Request, int]]:
-        """Fill free slots from the queue (strict FIFO).  Each admission
-        prefills batch-1 into the slot's own pages and emits the first
-        token from the prefill logits."""
-        ems: List[Tuple[Request, int]] = []
+        """Fill free slots from the queue (strict FIFO), then prefill all
+        admissions of this step in batched groups of equal prompt length.
+        Each admission reserves only its prompt pages and emits the first
+        token from its prefill logits row."""
+        admitted: List[Tuple[Request, int]] = []
         while True:
             req = self.sched.next_queued()
             if req is None:
@@ -162,31 +256,48 @@ class Engine:
             slot = self.sched.free_slot()
             if slot is None:
                 break
-            tp = len(req.prompt)
-            need = self.kv.blocks_for(min(tp + req.max_new - 1,
-                                          self.max_len))
-            pages = self.alloc.alloc(need)
+            pages = self.alloc.alloc(self.kv.blocks_for(len(req.prompt)))
             if pages is None:        # wait for active slots to free pages
                 break
             self.sched.bind(slot, req)
+            self._seq += 1
+            self.slot_seq[slot] = self._seq
             self.slot_pages[slot] = pages
             self.page_table[slot] = 0
             self.page_table[slot, :len(pages)] = pages
+            admitted.append((req, slot))
+
+        ems: List[Tuple[Request, int]] = []
+        by_len = {}
+        for req, slot in admitted:
+            by_len.setdefault(len(req.prompt), []).append((req, slot))
+        for tp in sorted(by_len):
+            group = by_len[tp]
+            bucket = 1                # pad to a power of two: bounded jit
+            while bucket < len(group):   # cache (#lengths x log2 slots)
+                bucket *= 2
+            toks = [r.prompt for r, _ in group]
+            toks += [toks[0]] * (bucket - len(group))   # rows discarded
             logits, cache = self._prefill(
-                self.params, {"tokens": jnp.asarray([req.prompt], jnp.int32)})
-            self.pools = self.kv.write_prefill(self.pools, pages, cache, tp)
-            self.pos[slot] = tp
-            tok = self._sample(np.asarray(logits)[0, -1], req.temperature)
-            req.out.append(tok)
-            self.last_tok[slot, 0] = tok
-            ems.append((req, tok))
-            self._maybe_finish(slot)
+                self.params, {"tokens": jnp.asarray(toks, jnp.int32)})
+            logits = np.asarray(logits)
+            for row, (req, slot) in enumerate(group):
+                self.pools = self.kv.write_prefill(
+                    self.pools, self.slot_pages[slot], cache, tp, row=row)
+                self.pos[slot] = tp
+                tok = self._sample(req, logits[row, -1])
+                req.out.append(tok)
+                self.last_tok[slot, 0] = tok
+                ems.append((req, tok))
+                self._maybe_finish(slot)
         return ems
 
     def step_once(self) -> List[Tuple[Request, int]]:
-        """Admit what fits, then run one batched decode step.  Returns the
-        ``(request, token)`` emissions of this call."""
+        """Admit what fits, grow pages (evicting under pressure), then run
+        one batched decode step.  Returns the ``(request, token)``
+        emissions of this call."""
         ems = self._admit()
+        self._grow()
         active = self.sched.active
         if not active:
             return ems
@@ -198,7 +309,7 @@ class Engine:
             self.pos[s] += 1                     # each wrote its last token
         for s in active:
             req = self.sched.slots[s]
-            tok = self._sample(logits[s], req.temperature)
+            tok = self._sample(req, logits[s])
             req.out.append(tok)
             self.last_tok[s, 0] = tok
             ems.append((req, tok))
@@ -228,7 +339,8 @@ class Engine:
             completed=[r for r in requests if r.done],
             unfinished=[self.sched.slots[s] for s in self.sched.active],
             unserved=self.sched.queued,
-            failed=list(self._failed))
+            failed=list(self._failed),
+            preemptions=sum(r.preemptions for r in requests))
         if report.truncated:
             print(f"[serve] max_steps={max_steps} hit: "
                   f"{len(report.unfinished)} in flight, "
@@ -238,9 +350,10 @@ class Engine:
 
 
 def serial_engine(model, params, *, max_len: int, page_size: int = 8,
-                  rng_seed: int = 0) -> Engine:
+                  rng_seed: int = 0, decode_route: str = "paged") -> Engine:
     """The slot-serial reference: one slot, so requests are served strictly
     one at a time through the *identical* compute path.  Under greedy
     decoding the batched engine must match this token-for-token."""
     return Engine(model, params, batch_slots=1, max_len=max_len,
-                  page_size=page_size, rng_seed=rng_seed)
+                  page_size=page_size, rng_seed=rng_seed,
+                  decode_route=decode_route)

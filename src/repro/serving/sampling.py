@@ -1,0 +1,69 @@
+"""Sampling layer for the serving engine: greedy / top-k / top-p with
+per-request seeds.
+
+Determinism contract
+--------------------
+A request's token stream is a pure function of ``(its logits, its sampling
+params, its seed, the token index within its own stream)``:
+
+* greedy (``temperature <= 0``) is exactly ``int(np.argmax(row))`` — the
+  PR-7 code path, bitwise-unchanged;
+* seeded sampling draws token ``i`` with ``fold_in(PRNGKey(seed), i)``, so
+  the stream does not depend on batch composition, admission order, or how
+  many times the engine's shared RNG was split for *other* requests — and a
+  preempted request that recomputes from scratch replays the identical
+  stream (token ``i`` is always drawn with the same key);
+* top-k keeps the ``k`` highest logits (ties broken by lowest token id,
+  stable); top-p keeps the smallest prefix of the descending-probability
+  ordering whose mass reaches ``p`` (always at least one token).
+
+Filtering runs in float64 numpy on the host (one row per sampled token —
+decode is model-bound, not sampler-bound), the draw through
+``jax.random.categorical`` so the same seed gives the same token on every
+backend that reproduces the logits.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = float("-inf")
+
+
+def filter_logits(row: np.ndarray, *, top_k: int = 0,
+                  top_p: float = 1.0) -> np.ndarray:
+    """Mask ``row`` down to the top-k / nucleus-p support (float64 copy;
+    masked entries are ``-inf``).  ``top_k=0`` / ``top_p>=1`` disable the
+    respective filter.  At least one token always survives."""
+    row = np.asarray(row, np.float64).copy()
+    if top_k and top_k < row.size:
+        # stable order: descending value, ascending token id on ties
+        order = np.lexsort((np.arange(row.size), -row))
+        row[order[top_k:]] = NEG_INF
+    if 0.0 < top_p < 1.0:
+        order = np.lexsort((np.arange(row.size), -row))
+        sorted_row = row[order]
+        probs = np.exp(sorted_row - sorted_row.max())
+        probs /= probs.sum()
+        keep = np.cumsum(probs) - probs < top_p   # first token always kept
+        row[order[~keep]] = NEG_INF
+    return row
+
+
+def sample_token(row, *, temperature: float = 0.0, top_k: int = 0,
+                 top_p: float = 1.0, seed: Optional[int] = None,
+                 index: int = 0) -> int:
+    """One token from one logits row.  Greedy when ``temperature <= 0``
+    (bitwise the PR-7 argmax); otherwise a seeded temperature/top-k/top-p
+    draw keyed on ``(seed, index)`` only."""
+    row = np.asarray(row)
+    if temperature <= 0:
+        return int(np.argmax(row))
+    filtered = filter_logits(row.astype(np.float64) / float(temperature),
+                             top_k=top_k, top_p=top_p)
+    key = jax.random.fold_in(jax.random.PRNGKey(0 if seed is None else seed),
+                             index)
+    return int(jax.random.categorical(key, jnp.asarray(filtered, jnp.float32)))

@@ -4,14 +4,27 @@ Request lifecycle::
 
     QUEUED --admit--> ACTIVE --finish--> DONE
     QUEUED --reject (invalid / exceeds cache capacity)--> FAILED
+    ACTIVE --preempt (page pressure)--> QUEUED (front; out cleared)
 
 Admission is strict FIFO: the head of the queue is admitted as soon as a
-batch slot is free *and* the allocator can cover its worst-case page
-reservation (``min(prompt_len + max_new - 1, max_len)`` positions — the
-last sampled token is returned but never written, hence the ``- 1``).  No
-head-of-line bypass keeps the schedule deterministic, which is what lets
-the batched engine be compared token-for-token against the slot-serial
-reference.
+batch slot is free *and* the allocator covers its *prompt* pages
+(``blocks_for(prompt_len)`` — no worst-case ``max_new`` reservation; decode
+growth allocates pages on demand and preempts a victim under pressure).
+No head-of-line bypass keeps the schedule deterministic, which is what
+lets the batched engine be compared token-for-token against the
+slot-serial reference.
+
+Preemption re-queues the victim at the *front* of the queue.  Every queued
+request was submitted after every active one (actives were admitted from
+the queue head), and victims are chosen youngest-first, so front re-queue
+restores the global FIFO order exactly.  The victim's generated tokens are
+discarded and recomputed from scratch on re-admission — greedy decoding
+and the seeded sampler are both pure functions of (request, token index),
+so the re-run reproduces the identical stream.
+
+Sampling parameters ride on the request: ``temperature`` / ``top_k`` /
+``top_p`` / ``seed`` (see ``serving/sampling.py`` for the determinism
+contract).
 
 The scheduler is pure bookkeeping (queue + slot binding + states); the
 engine owns all compute and cache state.
@@ -31,10 +44,14 @@ class Request:
     prompt: List[int]
     max_new: int = 16
     temperature: float = 0.0
+    top_k: int = 0                 # 0 = no top-k filter
+    top_p: float = 1.0             # 1.0 = no nucleus filter
+    seed: Optional[int] = None     # None = legacy engine-shared RNG
     out: List[int] = field(default_factory=list)
     done: bool = False
     error: Optional[str] = None
     state: str = QUEUED
+    preemptions: int = 0           # times evicted + re-queued mid-decode
 
 
 class Scheduler:
@@ -76,6 +93,17 @@ class Scheduler:
         self.slots[slot] = None
         req.state = DONE if done else QUEUED
         req.done = done
+        return req
+
+    def preempt(self, slot: int) -> Request:
+        """Evict the request in ``slot`` back to the *front* of the queue
+        (FIFO-preserving: every queued request is younger than any active
+        one).  Its emitted tokens are discarded — the re-run recomputes the
+        identical stream from scratch."""
+        req = self.release(slot, done=False)
+        req.out.clear()
+        req.preemptions += 1
+        self.queue.appendleft(req)
         return req
 
     @property

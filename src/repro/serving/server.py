@@ -9,17 +9,27 @@ with per-slot admission, a paged KV cache with free-list reuse
 (``allocator``/``cache``), one-shot per-request prefill, and flash-decode
 steps masked by a per-slot length vector.
 
+The engine has since grown block-indexed paged-attention decode (the page
+table rides into the kernel; ``decode_route="gather"`` keeps the dense
+gather view as the differential oracle), eviction/preemption under page
+pressure, batched grouped prefill, and per-request sampling
+(``sampling``: greedy / top-k / top-p with per-request seeds).
+
 Import from here for the stable entry points; the submodules hold the
 pieces:
 
 * :class:`Engine` / :func:`serial_engine` / :class:`RunReport` — engine
-* :class:`Request` — request dataclass (queue states in ``scheduler``)
+* :class:`Request` — request dataclass (queue states in ``scheduler``;
+  sampling params ``temperature``/``top_k``/``top_p``/``seed`` ride on it)
 * :class:`PageAllocator` / :class:`PagedKVCache` — cache machinery
+* :func:`sample_token` / :func:`filter_logits` — the sampling layer
 """
 from repro.serving.allocator import NULL_PAGE, PageAllocator
 from repro.serving.cache import PagedKVCache
-from repro.serving.engine import Engine, RunReport, serial_engine
+from repro.serving.engine import DECODE_ROUTES, Engine, RunReport, serial_engine
+from repro.serving.sampling import filter_logits, sample_token
 from repro.serving.scheduler import Request, Scheduler
 
 __all__ = ["Engine", "RunReport", "Request", "Scheduler", "PageAllocator",
-           "PagedKVCache", "serial_engine", "NULL_PAGE"]
+           "PagedKVCache", "serial_engine", "NULL_PAGE", "DECODE_ROUTES",
+           "sample_token", "filter_logits"]

@@ -325,3 +325,61 @@ def test_bad_autotune_mode_rejected():
     with pytest.raises(ValueError, match="autotune"):
         KFACEngine(mlp, KFACConfig(autotune="sometimes"),
                    family="bernoulli")
+
+
+# ---------------------------------------------------------------------------
+# paged flash-decode tuning: legal head blocks, every candidate allclose
+# ---------------------------------------------------------------------------
+
+PAGED_SHAPE = (2, 8, 2, 32, 3, 8)       # (b, hq, hkv, hd, max_blocks, page)
+
+
+def test_paged_decode_candidates_legal():
+    b, hq, hkv, hd, nb, page = PAGED_SHAPE
+    group = hq // hkv
+    cands = at.candidates("flash_decode_paged", PAGED_SHAPE)
+    assert cands and {"bh": 1} in cands
+    for cfg in cands:
+        assert set(cfg) == {"bh"}
+        assert cfg["bh"] <= group and group % cfg["bh"] == 0
+    # ragged head dim / non-GQA head counts: no legal candidates
+    assert at.candidates("flash_decode_paged", (2, 8, 2, 33, 3, 8)) == []
+    assert at.candidates("flash_decode_paged", (2, 7, 2, 32, 3, 8)) == []
+
+
+def test_paged_decode_every_candidate_allclose():
+    """Each legal head block is the same kernel numerically — vs the
+    dense-gather einsum oracle, not just vs another bh."""
+    from repro.kernels import ops
+    from repro.kernels.flash_decode import flash_decode_paged
+    b, hq, hkv, hd, nb, page = PAGED_SHAPE
+    num_pages = 1 + b * nb
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (b, hq, hd), jnp.float32)
+    kp = jax.random.normal(jax.random.fold_in(k, 1),
+                           (num_pages, page, hkv, hd), jnp.float32)
+    vp = jax.random.normal(jax.random.fold_in(k, 2),
+                           (num_pages, page, hkv, hd), jnp.float32)
+    pt = jax.random.permutation(jax.random.fold_in(k, 3),
+                                jnp.arange(1, num_pages)).reshape(b, nb)
+    lengths = jnp.asarray([page + 3, nb * page], jnp.int32)
+    kd, vd = ops.paged_gather(kp, vp, pt)
+    want = ops.flash_decode_ref(q, kd, vd, lengths, window=5, cap=30.0)
+    for cfg in at.candidates("flash_decode_paged", PAGED_SHAPE):
+        out = flash_decode_paged(q, kp, vp, lengths, pt, window=5, cap=30.0,
+                                 interpret=True, **cfg)
+        np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5,
+                                   err_msg=f"cfg={cfg}")
+
+
+def test_paged_decode_tunes_and_caches():
+    timer, calls = _counting_timer()
+    cfg = at.tuned("flash_decode_paged", PAGED_SHAPE, jnp.bfloat16,
+                   interpret=True, mode="cache", timer=timer)
+    cands = at.candidates("flash_decode_paged", PAGED_SHAPE)
+    assert cfg in cands
+    assert calls["n"] == len(cands)
+    at.clear_memo()                      # fresh process: disk hit
+    assert at.tuned("flash_decode_paged", PAGED_SHAPE, jnp.bfloat16,
+                    interpret=True, mode="cache", timer=timer) == cfg
+    assert calls["n"] == len(cands)

@@ -196,28 +196,38 @@ def test_allocator_basics():
 
 
 def _allocator_sequence_invariants(ops_list, num_pages):
-    """Any alloc/free sequence: no page is ever in two live allocations,
-    no page leaks (free + held always partitions the capacity), and the
-    null page is never handed out."""
+    """Any alloc/free/evict/re-admit interleaving: no page is ever in two
+    live allocations, no page leaks (free + held always partitions the
+    capacity), the null page is never handed out, and evictions return
+    pages to the *same* free list (re-admission after eviction reuses
+    them) while the eviction counter tracks exactly the evicted pages."""
     a = PageAllocator(num_pages)
     live = []                                    # list of page-lists
-    for is_alloc, n in ops_list:
-        if is_alloc or not live:
+    evicted_total = 0
+    for kind, n in ops_list:
+        if kind == 0 or not live:                # alloc (or forced when empty)
             got = a.alloc(n)
             if got is None:
                 assert n > a.n_free, "alloc refused despite enough pages"
                 continue
             assert len(got) == n and NULL_PAGE not in got
             live.append(got)
-        else:
+        elif kind == 1:                          # free (request finished)
             a.free(live.pop(n % len(live)))
+        else:                                    # evict (request preempted)
+            pages = live.pop(n % len(live))
+            a.evict(pages)
+            evicted_total += len(pages)
         held = [p for pages in live for p in pages]
         assert len(held) == len(set(held)), "page double-assigned"
         assert sorted(held + a.free_pages) == list(range(1, num_pages)), \
             "page leaked or duplicated"
+        assert a.n_evicted == evicted_total
     for pages in live:
         a.free(pages)
     assert a.n_free == a.capacity
+    with pytest.raises(ValueError):
+        a.evict([NULL_PAGE])                     # reserved page never evicted
 
 
 try:
@@ -228,7 +238,7 @@ except ImportError:                   # pragma: no cover
 
 if HAVE_HYPOTHESIS:
     @settings(max_examples=60, deadline=None)
-    @given(st.lists(st.tuples(st.booleans(), st.integers(0, 6)),
+    @given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 6)),
                     max_size=60),
            st.integers(2, 12))
     def test_allocator_never_double_assigns_or_leaks(ops_list, num_pages):
@@ -238,7 +248,7 @@ else:                                 # pragma: no cover
         # hypothesis unavailable: fixed pseudo-random sequences instead
         rng = np.random.RandomState(0)
         for trial in range(20):
-            ops_list = [(bool(rng.randint(2)), int(rng.randint(7)))
+            ops_list = [(int(rng.randint(3)), int(rng.randint(7)))
                         for _ in range(60)]
             _allocator_sequence_invariants(ops_list,
                                            int(rng.randint(2, 13)))
@@ -308,3 +318,147 @@ def test_unsupported_arch_rejected():
     params = lm.init_params(jax.random.PRNGKey(0))
     with pytest.raises(NotImplementedError):
         Engine(lm, params, batch_slots=1, max_len=16)
+
+
+# ---------------------------------------------------------------------------
+# paged decode route: block-indexed default vs the dense-gather oracle
+# ---------------------------------------------------------------------------
+
+def test_paged_route_is_default_and_matches_gather_oracle(smollm):
+    """The block-indexed paged route (default) must be token-identical to
+    the dense-gather oracle route on the same request stream."""
+    lm, params, cfg = smollm
+    spec = [(0, 3, 4), (1, 6, 9), (2, 4, 2), (3, 8, 5), (4, 3, 7)]
+
+    eng = Engine(lm, params, batch_slots=3, max_len=32)
+    assert eng.decode_route == "paged"
+    paged = _reqs(cfg, spec)
+    eng.run(paged)
+    assert all(r.done for r in paged)
+
+    ora = Engine(lm, params, batch_slots=3, max_len=32,
+                 decode_route="gather")
+    oracle = _reqs(cfg, spec)
+    ora.run(oracle)
+    for a, b in zip(paged, oracle):
+        assert a.out == b.out, ("paged vs gather", a.uid, a.out, b.out)
+
+
+# ---------------------------------------------------------------------------
+# eviction / preemption: admission without worst-case reservation
+# ---------------------------------------------------------------------------
+
+def test_admission_reserves_prompt_pages_only(smollm):
+    """Two requests whose combined *worst-case* footprint exceeds the pool
+    must still decode concurrently — admission reserves only prompt pages
+    (the old engine serialized them behind a full max_new reservation)."""
+    lm, params, cfg = smollm
+    # 5 allocatable pages; each request's worst case is blocks_for(15) = 4
+    eng = Engine(lm, params, batch_slots=2, max_len=16, page_size=4,
+                 num_pages=6)
+    reqs = _reqs(cfg, [(0, 4, 12), (1, 4, 12)])
+    for r in reqs:
+        assert eng.submit(r)
+    eng.step_once()
+    assert eng.sched.n_active == 2, (
+        "worst-case reservation blocked concurrent admission")
+    eng.run([], max_steps=500)          # drain
+    assert all(r.done for r in reqs)
+
+
+def test_batched_matches_serial_under_eviction_pressure(smollm):
+    """Tiny page pool forces mid-decode preemption: victims are evicted,
+    re-queued at the front and recomputed from scratch — every request must
+    still finish with exactly the tokens of an unpressured run."""
+    lm, params, cfg = smollm
+    spec = [(0, 3, 4), (1, 6, 9), (2, 4, 2), (3, 8, 5), (4, 3, 7)]
+
+    tight = Engine(lm, params, batch_slots=3, max_len=32, page_size=4,
+                   num_pages=7)
+    pressured = _reqs(cfg, spec)
+    rep = tight.run(pressured, max_steps=500)
+    assert all(r.done for r in pressured), [
+        (r.uid, r.state, r.error) for r in pressured]
+    assert rep.preemptions > 0, "pool too large to exercise preemption"
+    assert tight.alloc.n_evicted > 0
+    assert any(r.preemptions > 0 for r in pressured)
+
+    roomy = Engine(lm, params, batch_slots=3, max_len=32, page_size=4)
+    clean = _reqs(cfg, spec)
+    roomy.run(clean)
+    for a, b in zip(pressured, clean):
+        assert a.out == b.out, (
+            "preempted re-run diverged", a.uid, a.preemptions, a.out, b.out)
+
+
+# ---------------------------------------------------------------------------
+# sampling: greedy bitwise-stable, seeded streams batch-independent
+# ---------------------------------------------------------------------------
+
+def test_sampling_filters_and_greedy():
+    from repro.serving.sampling import filter_logits, sample_token
+    row = np.asarray([1.0, 3.0, 3.0, 2.0, -1.0])
+    # greedy is exactly np.argmax (first max wins ties) — the PR-7 path
+    assert sample_token(row) == int(np.argmax(row)) == 1
+    # top-k keeps the k highest, ties broken toward the lower token id
+    f = filter_logits(row, top_k=2)
+    assert np.isfinite(f[[1, 2]]).all() and not np.isfinite(f[[0, 3, 4]]).any()
+    # top-p keeps the smallest descending-probability prefix reaching p;
+    # at least one token always survives
+    f = filter_logits(np.asarray([10.0, 0.0, 0.0]), top_p=0.5)
+    assert np.isfinite(f[0]) and not np.isfinite(f[1:]).any()
+    f = filter_logits(np.asarray([0.0, 0.0]), top_p=1e-9)
+    assert np.isfinite(f).sum() == 1
+    # seeded draws are a pure function of (seed, index)
+    row2 = np.random.RandomState(0).randn(32)
+    a = [sample_token(row2, temperature=0.8, seed=5, index=i)
+         for i in range(8)]
+    b = [sample_token(row2, temperature=0.8, seed=5, index=i)
+         for i in range(8)]
+    assert a == b
+    assert a != [sample_token(row2, temperature=0.8, seed=6, index=i)
+                 for i in range(8)]
+
+
+def test_seeded_streams_independent_of_batch_composition(smollm):
+    """A seeded request's token stream must not depend on what else is in
+    the batch: batched seeded run == solo serial run, per request."""
+    lm, params, cfg = smollm
+    spec = [(0, 4, 6), (1, 6, 6), (2, 4, 5)]
+    eng = Engine(lm, params, batch_slots=3, max_len=32)
+    batched = [Request(uid=u, prompt=[(7 * u + j) % cfg.vocab_size
+                                      for j in range(tp)], max_new=mn,
+                       temperature=0.9, top_k=20, top_p=0.95, seed=100 + u)
+               for u, tp, mn in spec]
+    eng.run(batched)
+    assert all(r.done for r in batched)
+    for u, tp, mn in spec:
+        ser = serial_engine(lm, params, max_len=32)
+        solo = [Request(uid=u, prompt=[(7 * u + j) % cfg.vocab_size
+                                       for j in range(tp)], max_new=mn,
+                        temperature=0.9, top_k=20, top_p=0.95, seed=100 + u)]
+        ser.run(solo)
+        b = next(r for r in batched if r.uid == u)
+        assert b.out == solo[0].out, (u, b.out, solo[0].out)
+
+
+def test_seeded_streams_independent_of_admission_order(smollm):
+    """Submitting the same seeded requests in a different order must not
+    change any request's stream (per-request fold_in keys, no shared RNG)."""
+    lm, params, cfg = smollm
+    spec = [(0, 4, 5), (1, 6, 5), (2, 5, 5), (3, 4, 5)]
+
+    def mk(u, tp, mn):
+        return Request(uid=u, prompt=[(7 * u + j) % cfg.vocab_size
+                                      for j in range(tp)], max_new=mn,
+                       temperature=0.7, top_k=15, seed=50 + u)
+
+    e1 = Engine(lm, params, batch_slots=2, max_len=32)
+    fwd = [mk(*s) for s in spec]
+    e1.run(fwd)
+    e2 = Engine(lm, params, batch_slots=2, max_len=32)
+    rev = [mk(*s) for s in reversed(spec)]
+    e2.run(rev)
+    by_uid = {r.uid: r for r in rev}
+    for r in fwd:
+        assert r.out == by_uid[r.uid].out, (r.uid, r.out, by_uid[r.uid].out)
