@@ -1,0 +1,200 @@
+"""Curvature-service benchmark: iHVP throughput + uncertainty-decode cost.
+
+Measures the two product surfaces of ``repro.curvature``:
+
+* **iHVP throughput** — batched EKFAC inverse-Hessian-vector products over
+  a bundle snapshotted from a partially-trained autoencoder
+  (``ihvp_mlp_xla``), an XLA-vs-Pallas pair on a tileable 128x128 dense
+  block (``ihvp_block128_xla`` / ``ihvp_block128_pallas``: the batched
+  ``rotate_rescale`` route vs its einsum fallback — the MLP's
+  homogeneous-coordinate a_dims never satisfy ``tile_ok`` so the realistic
+  row is XLA-only), plus one full influence attribution query
+  (``influence_query_topk``: per-example grads -> iHVP -> N dot
+  products -> top-k).
+* **uncertainty-decode overhead** — the smollm reduced engine serving the
+  identical greedy request stream with and without per-token Laplace
+  variance (``uncertainty_decode_overhead``): ``derived`` is the
+  with/without wall-clock ratio and the row carries ``plain_us`` and
+  ``overhead_frac`` meta.  The variance head is one extra
+  ``(B, d) @ (d, V)`` matmul per step, so the ratio should sit near 1.
+
+Rows land in ``BENCH_influence.json`` (benchlib schema; ``derived`` =
+vectors/s for iHVP rows, examples/s for the influence row, overhead ratio
+for the uncertainty row).
+
+CLI:  --quick   smaller batches / fewer repeats (CI bench-smoke)
+      --check   validate schema + uncertainty rows carry finite overhead
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced_config
+from repro.configs.base import KFACConfig
+from repro.core.blocks import build_blocks
+from repro.curvature import (CurvatureBundle, InfluenceEngine, LaplaceHead,
+                             per_example_grads, snapshot_bundle)
+from repro.data.pipeline import SyntheticAutoencoderData
+from repro.models.lm import LM
+from repro.models.mlp import MLP
+from repro.optimizers import kfac
+from repro.serving.server import Engine, Request
+
+DIMS = [64, 48, 24, 12, 24, 48, 64]
+
+
+def _trained_bundle(steps=10):
+    """Partially-trained DIMS autoencoder under EKFAC + its bundle."""
+    mlp = MLP(DIMS, nonlin="tanh", loss="bernoulli")
+    params = mlp.init_params(jax.random.PRNGKey(0), sparse=False)
+    data = SyntheticAutoencoderData(DIMS[0], 8, 1024, seed=7)
+    batch = data.batch(0)
+    opt = kfac(mlp, KFACConfig(inv_mode="eigen", lambda_init=3.0, t3=5),
+               family="bernoulli")
+    state = opt.init(params, batch)
+    for step in range(steps):
+        params, state, _ = opt.update(None, state, params, batch,
+                                      jax.random.fold_in(
+                                          jax.random.PRNGKey(1), step))
+    return mlp, params, batch, snapshot_bundle(opt.engine, state)
+
+
+def _time(fn, repeats):
+    fn()                                    # compile/warm
+    t0 = time.time()
+    for _ in range(repeats):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.time() - t0) / repeats
+
+
+def _ihvp_rows(mlp, params, batch, bundle, quick):
+    n_vec = 8 if quick else 16
+    repeats = 3 if quick else 10
+    grads = per_example_grads(mlp, params,
+                              jax.tree.map(lambda x: x[:n_vec], batch))
+    eng = InfluenceEngine(bundle)
+    secs = _time(lambda: eng.ihvp_batched(grads), repeats)
+    yield ("ihvp_mlp_xla", secs * 1e6, n_vec / secs, {"n_vectors": n_vec})
+    # the MLP's homogeneous-coordinate dims (d_in+1) never tile, so the
+    # backend pair runs on a tileable 128x128 dense block: the batched
+    # rotate_rescale Pallas route vs its einsum fallback
+    yield from _block128_rows(n_vec, repeats)
+    query = jax.tree.map(lambda a: a[0], grads)
+
+    def attribution():
+        scores = eng.influence(query, grads)
+        return eng.topk(scores, 5)
+
+    secs = _time(attribution, repeats)
+    yield ("influence_query_topk", secs * 1e6, n_vec / secs,
+           {"n_examples": n_vec})
+
+
+def _block128_rows(n_vec, repeats):
+    from repro.core.tags import LayerMeta
+    meta = LayerMeta(name="dense128", param_path=("w",), d_in=128,
+                     d_out=128, kind="dense")
+    vs = jax.random.normal(jax.random.PRNGKey(3), (n_vec, 128, 128))
+    a = jax.random.normal(jax.random.PRNGKey(4), (512, 128)) / 16.0
+    g = jax.random.normal(jax.random.PRNGKey(5), (512, 128)) / 16.0
+    fac = {"a": a.T @ a + 0.1 * jnp.eye(128),
+           "g": g.T @ g + 0.1 * jnp.eye(128)}
+    for backend in ("xla", "pallas"):
+        blk = build_blocks({"dense128": meta},
+                           KFACConfig(kernel_backend=backend))["dense128"]
+        eig = blk.eigen_state(fac, 0.1)
+        fn = jax.jit(lambda v, b=blk, e=eig: b.ihvp_batched(e, v))
+        secs = _time(lambda: fn(vs), repeats)
+        yield (f"ihvp_block128_{backend}", secs * 1e6, n_vec / secs,
+               {"n_vectors": n_vec})
+
+
+def _identity_laplace(lm):
+    """Zero-factor bundle: damp = gamma^2, finite positive variance —
+    exercises the full uncertainty compute path without a training run."""
+    name = "lm_head" if "lm_head" in lm.metas else "embed"
+    meta = lm.metas[name]
+    blk = build_blocks({name: meta}, KFACConfig())[name]
+    eig = blk.eigen_state(blk.init_factors(), 1.0)
+    return LaplaceHead(CurvatureBundle(
+        step=0, lam=1.0, gamma=1.0, eta=0.0,
+        metas={name: meta}, eigen={name: eig}))
+
+
+def _serve_reqs(cfg, n, uncertainty):
+    return [Request(uid=u, prompt=[(7 * u + j) % cfg.vocab_size
+                                   for j in range(4 + u % 3)],
+                    max_new=8, uncertainty=uncertainty) for u in range(n)]
+
+
+def _uncertainty_row(quick):
+    n_req = 4 if quick else 12
+    cfg = get_reduced_config("smollm-135m")
+    lm = LM(cfg)
+    params = lm.init_params(jax.random.PRNGKey(0))
+    lap = _identity_laplace(lm)
+
+    def drive(engine, unc):
+        engine.run(_serve_reqs(cfg, n_req, unc), max_steps=10_000)  # warm
+        engine.reset()
+        t0 = time.time()
+        rep = engine.run(_serve_reqs(cfg, n_req, unc), max_steps=10_000)
+        return time.time() - t0, rep
+
+    plain_s, _ = drive(Engine(lm, params, batch_slots=4, max_len=48), False)
+    unc_s, rep = drive(Engine(lm, params, batch_slots=4, max_len=48,
+                              laplace=lap), True)
+    ratio = unc_s / plain_s
+    return ("uncertainty_decode_overhead", unc_s * 1e6, ratio,
+            {"plain_us": plain_s * 1e6, "overhead_frac": ratio - 1.0,
+             "n_requests": n_req,
+             "mean_token_variance": rep.mean_token_variance})
+
+
+def run(quick: bool = False):
+    """Yield benchlib rows; also used by benchmarks/run.py."""
+    mlp, params, batch, bundle = _trained_bundle(steps=5 if quick else 10)
+    yield from _ihvp_rows(mlp, params, batch, bundle, quick)
+    yield _uncertainty_row(quick)
+
+
+def _check(rows) -> None:
+    from benchmarks import benchlib
+    payload = benchlib.build_payload("influence", rows)
+    benchlib.validate_rows(payload)
+    names = {r[0] for r in rows}
+    want = {"ihvp_mlp_xla", "ihvp_block128_xla", "ihvp_block128_pallas",
+            "influence_query_topk", "uncertainty_decode_overhead"}
+    if not want <= names:
+        raise SystemExit(f"influence suite missing rows: {want - names}")
+    print("[check] influence schema ok; "
+          + ", ".join(f"{r[0]}={r[2]:.2f}" for r in rows))
+
+
+def main() -> None:
+    import argparse
+    import os
+
+    from benchmarks import benchlib
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--check", action="store_true")
+    args = ap.parse_args()
+    rows = list(run(quick=args.quick))
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row[0]},{row[1]:.0f},{row[2]:.4f}")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    benchlib.emit_json(os.path.join(root, "BENCH_influence.json"),
+                       "influence", rows)
+    if args.check:
+        _check(rows)
+
+
+if __name__ == "__main__":
+    main()

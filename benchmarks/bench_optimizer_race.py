@@ -40,11 +40,12 @@ def race(model, params, data, opt, steps):
 
 
 def run_kfac(steps=30, inv_mode="blkdiag", momentum=True, rescale=True,
-             lambda_init=3.0, refresh_mode="serial"):
+             lambda_init=3.0, refresh_mode="serial", kl_clip=0.0):
     mlp, params, data = make_problem()
     cfg = KFACConfig(inv_mode=inv_mode, use_momentum=momentum,
                      use_rescale=rescale, lambda_init=lambda_init, t3=5,
-                     fixed_lr=0.02, eta=1e-5, refresh_mode=refresh_mode)
+                     fixed_lr=0.02, eta=1e-5, refresh_mode=refresh_mode,
+                     kl_clip=kl_clip)
     opt = optimizers.kfac(mlp, cfg, family="bernoulli")
     return race(mlp, params, data, opt, steps)
 
@@ -97,6 +98,10 @@ def run(steps=30):
     rows.append(("kfac_eigen", secs / steps * 1e6, kf[-1]))
     kf, secs = run_kfac(steps, "blkdiag", momentum=False)
     rows.append(("kfac_no_momentum", secs / steps * 1e6, kf[-1]))
+    # KL-clipped fixed-lr chain (transform.with_kl_clip / KFACConfig.kl_clip):
+    # the production norm-constraint knob, raced on the fused update path
+    kf, secs = run_kfac(steps, "blkdiag", rescale=False, kl_clip=1e-3)
+    rows.append(("kfac_kl_clip", secs / steps * 1e6, kf[-1]))
     # distributed refresh service (repro.distributed): same optimizer, the
     # T3 inverse refresh executed block-parallel / async double-buffered.
     # On this 1-device CPU harness these rows track the *scheduling

@@ -86,6 +86,16 @@ def validate_rows(payload: dict) -> dict:
                     f"row {row['name']!r}: {field} = {v!r} is not finite")
         if row["us_per_call"] < 0:
             raise ValueError(f"row {row['name']!r}: negative us_per_call")
+        if payload["suite"] == "influence":
+            # the uncertainty row's claim is the overhead vs plain decode —
+            # it must carry the plain baseline and a finite overhead frac
+            if row["name"].startswith("uncertainty"):
+                for field in ("plain_us", "overhead_frac"):
+                    v = row.get(field)
+                    if not isinstance(v, (int, float)) or not math.isfinite(v):
+                        raise ValueError(
+                            f"influence row {row['name']!r}: {field} = "
+                            f"{v!r} is not finite")
         if payload["suite"] == "serving":
             # TTFT (queueing + prefill) and decode-step latency are separate
             # distributions; a serving row must carry both percentile pairs

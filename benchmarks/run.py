@@ -17,7 +17,8 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # suite name -> BENCH_*.json filename for the machine-readable trajectory
 _JSON_SUITES = {"kernels": "BENCH_kernels.json",
                 "optimizer_race": "BENCH_optimizer.json",
-                "serving": "BENCH_serving.json"}
+                "serving": "BENCH_serving.json",
+                "influence": "BENCH_influence.json"}
 
 # per-suite extra row fields (see benchlib docstring for the schema)
 _JSON_EXTRAS = {
@@ -30,7 +31,8 @@ def main() -> None:
     suites = []
     from benchmarks import (bench_optimizer_race, bench_damping,
                             bench_fisher_quality, bench_batch_scaling,
-                            bench_kernels, bench_serving, benchlib, roofline)
+                            bench_influence, bench_kernels, bench_serving,
+                            benchlib, roofline)
     suites = [
         ("optimizer_race", bench_optimizer_race.run),   # Fig. 10/11
         ("damping", bench_damping.run),                 # Fig. 7
@@ -38,6 +40,7 @@ def main() -> None:
         ("batch_scaling", bench_batch_scaling.run),     # Fig. 9
         ("kernels", bench_kernels.run),                 # S8 cost model
         ("serving", bench_serving.run),                 # continuous batching
+        ("influence", bench_influence.run),             # curvature service
         ("roofline", roofline.run),                     # dry-run derived
     ]
     print("name,us_per_call,derived")

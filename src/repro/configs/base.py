@@ -173,6 +173,8 @@ class KFACConfig:
                                       # mu for the fused update chain
     clip_delta_norm: float = 0.0      # use_rescale=False only: global-norm
                                       # clip of the applied update (0 = off)
+    kl_clip: float = 0.0              # use_rescale=False only: norm-constraint
+                                      # max lr²·|Δᵀ∇| per step (0 = off)
     stats_period: int = 1             # update stats every N steps
     staggered_inverse: bool = False   # legacy alias for refresh_mode="staggered"
     refresh_mode: str = "serial"      # serial | staggered | sharded | overlap:
@@ -229,6 +231,9 @@ class TrainConfig:
     checkpoint_dir: str = "/tmp/repro_ckpt"
     keep_checkpoints: int = 3
     log_every: int = 10
+    curvature_every: int = 0          # export a curvature bundle at steps
+                                      # divisible by this AND by
+                                      # checkpoint_every (0 = never)
 
 
 @dataclass(frozen=True)

@@ -203,6 +203,21 @@ class CurvatureBlock(abc.ABC):
         """``U = Q_A [ (Q_Aᵀ V Q_G) / (s + damp) ] Q_Gᵀ``; v shaped like W."""
         return INV.apply_eigen(self.meta, eig, v)
 
+    def ihvp(self, eig, v):
+        """Inverse-Hessian-vector product against this block's damped
+        Kronecker Fisher — the eigen apply, exposed under the name the
+        influence service uses (``curvature/ihvp.py``)."""
+        return self.precondition_eigen(eig, v)
+
+    def ihvp_batched(self, eig, vs):
+        """Batched iHVP over a stack of queries (leading ``N`` axis).
+
+        The explicit outer vmap is load-bearing: subclasses' internal
+        stacked-layer vmaps close over *all* args, so mapping only ``vs``
+        here keeps the shared eigen state un-batched while the Pallas
+        ``rotate_rescale`` route rides underneath unchanged."""
+        return jax.vmap(lambda v: self.precondition_eigen(eig, v))(vs)
+
     def eigen_specs(self, mesh) -> Dict[str, Any]:
         """Storage shardings for the eigen state: bases shard like their
         factors; the eigenbasis diagonals shard their d_in axis over `data`

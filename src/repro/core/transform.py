@@ -243,6 +243,38 @@ def momentum_global_clip(momentum: float, max_norm: float) -> Transform:
     return Transform(init, update)
 
 
+def with_kl_clip(inner: Transform, max_kl: float, lr: float = 1.0) -> Transform:
+    """Norm-constraint ("KL clip") wrapper — the knob every production
+    K-FAC ships (kfac_jax ``norm_constraint``, pytorch-kfac ``kl_clip``).
+
+    The trust region is the Fisher quadratic of the *applied* step: with
+    preconditioned direction ``Δ = inner(g)``, the second-order KL change
+    of step ``lr·Δ`` is ``≈ ½ lr² ΔᵀFΔ ≈ ½ lr² |Δᵀg|`` (using ``FΔ ≈ g``
+    when Δ is the damped-inverse apply of g).  The emitted update is
+
+        ν · inner(g),   ν = min(1, sqrt(max_kl / (lr² · |Δᵀg|)))
+
+    so the step never moves the predictive distribution by more than
+    ``max_kl`` nats (to second order).  The raw incoming update is
+    remembered as the gradient proxy *before* ``inner`` runs, which is why
+    this is a wrapper and not a chain stage.  Inner state is passed
+    through untouched (the stored velocity stays un-scaled, matching
+    ``momentum_global_clip``'s convention)."""
+
+    def init(params):
+        return inner.init(params)
+
+    def update(u, s, p):
+        g = u
+        u2, s = inner.update(u, s, p)
+        quad = jnp.abs(T.tree_dot(u2, g))
+        nu = jnp.minimum(
+            1.0, jnp.sqrt(max_kl / jnp.maximum(lr * lr * quad, 1e-20)))
+        return T.tree_scale(u2, nu), s
+
+    return Transform(init, update)
+
+
 def with_momentum(momentum: float) -> Transform:
     """Heavy-ball velocity: ``v <- momentum * v + u``; emits ``v``.
 

@@ -1,0 +1,34 @@
+"""Curvature-as-a-product: optimizer-free influence & uncertainty service.
+
+The training-time EKFAC state, exported as a :class:`CurvatureBundle`,
+queryable for inverse-Hessian-vector products / influence scores
+(:class:`InfluenceEngine`) and Laplace predictive variance on the serving
+path (:class:`LaplaceHead`) — no optimizer required on the consumer side.
+"""
+from repro.curvature.bundle import (
+    BUNDLE_SCHEMA,
+    BundleWriter,
+    CurvatureBundle,
+    load_bundle,
+    save_bundle,
+    snapshot_bundle,
+)
+from repro.curvature.ihvp import (
+    InfluenceEngine,
+    load_influence_engine,
+    per_example_grads,
+)
+from repro.curvature.uncertainty import LaplaceHead
+
+__all__ = [
+    "BUNDLE_SCHEMA",
+    "BundleWriter",
+    "CurvatureBundle",
+    "InfluenceEngine",
+    "LaplaceHead",
+    "load_bundle",
+    "load_influence_engine",
+    "per_example_grads",
+    "save_bundle",
+    "snapshot_bundle",
+]

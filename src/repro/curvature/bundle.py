@@ -1,0 +1,246 @@
+"""Curvature bundles: the optimizer's EKFAC state as a serving artifact.
+
+A *bundle* is the minimal, optimizer-free snapshot of the Fisher
+approximation K-FAC maintains during training: per-block factor eigenbases
+``Q_A, Q_G``, the eigenbasis diagonals ``s`` / ``damp`` (George et al.
+1806.03884 — together they define the damped inverse apply
+``Q_A [(Q_Aᵀ V Q_G)/(s+damp)] Q_Gᵀ``), the diagonal curvature of untagged
+params, and the damping metadata ``(lam, gamma, eta)`` under which the
+state was taken.  That is exactly what influence functions and Laplace
+posteriors need — and nothing else: no optimizer, no model, no
+``KFACEngine`` is required to load one (:func:`load_bundle` reconstructs
+the :class:`~repro.core.tags.LayerMeta` registry straight from the
+manifest).
+
+On-disk layout (schema-versioned, checkpoint-adjacent)::
+
+    <path>/
+      arrays.npz     — "eig::<block>::{qa,qg,s,damp}" + "diag::<param-key>"
+      manifest.json  — schema, step, lam/gamma/eta, dtype, per-block metas
+      COMMIT         — written last; absence marks a torn bundle
+
+Bundles are written *next to* the checkpoint step dirs (the checkpoint
+manifest's ``curvature_bundle`` pointer, schema v4) but never inside them:
+the checkpointer renames its step dir asynchronously and a co-located
+bundle would race that rename.
+
+Export is non-blocking on the training step, the same immutable-snapshot
+idea as the distributed ``OverlapController``: jax arrays are immutable, so
+:func:`snapshot_bundle` just captures references on the training thread and
+:class:`BundleWriter` fetches + serializes them on a daemon thread.
+
+Optional ``dtype="bfloat16"`` storage halves the eigenbasis bytes: numpy
+has no native bf16, so bases are stored as their ``uint16`` bit pattern and
+viewed back through ``ml_dtypes.bfloat16`` on load (``s``/``damp`` — the
+curvature magnitudes themselves — always stay float32).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.tags import LayerMeta
+
+BUNDLE_SCHEMA = 1
+_EIG_KEYS = ("qa", "qg", "s", "damp")
+_BASIS_KEYS = ("qa", "qg")          # the only keys eligible for bf16 storage
+_TUPLE_FIELDS = ("param_path", "conv_spatial", "conv_stride")
+
+
+@dataclasses.dataclass
+class CurvatureBundle:
+    """In-memory bundle: eigen state + metas + damping metadata.
+
+    ``eigen[name]`` is the per-block ``{"qa", "qg", "s", "damp"}`` dict
+    (``qa``/``qg`` are None on diagonal factor sides — identity rotation);
+    ``diag`` maps flat ``"::"``-joined param paths of *untagged* params to
+    their running squared-gradient diagonal.
+    """
+
+    step: int
+    lam: float
+    gamma: float
+    eta: float
+    metas: Dict[str, LayerMeta]
+    eigen: Dict[str, Dict[str, Any]]
+    diag: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    schema: int = BUNDLE_SCHEMA
+
+    @property
+    def block_names(self):
+        return sorted(self.eigen)
+
+
+def _meta_to_json(meta: LayerMeta) -> dict:
+    return dataclasses.asdict(meta)
+
+
+def _meta_from_json(d: dict) -> LayerMeta:
+    d = dict(d)
+    for f in _TUPLE_FIELDS:
+        if f in d:
+            d[f] = tuple(d[f])
+    return LayerMeta(**d)
+
+
+# ---------------------------------------------------------------------------
+# snapshot (training side — needs the engine; loading never does)
+# ---------------------------------------------------------------------------
+
+def snapshot_bundle(engine, state) -> Optional["CurvatureBundle"]:
+    """Capture the engine's current curvature as a bundle (device arrays —
+    cheap, non-blocking; hand the result to :class:`BundleWriter`).
+
+    In ``inv_mode="eigen"`` the live EKFAC state is referenced as-is; the
+    other inv_modes compute a fresh eigen state from the running factors
+    (one eigh per block — right after which ``apply_eigen`` equals the
+    damped ``eigh`` inverse exactly).  Returns None for optimizers without
+    curvature blocks (first-order baselines).
+    """
+    blocks = getattr(engine, "blocks", None)
+    if not blocks:
+        return None
+    eigen = {}
+    for name, blk in blocks.items():
+        if getattr(engine, "eigen", False) and name in state.inv:
+            eigen[name] = dict(state.inv[name])
+        else:
+            eigen[name] = blk.eigen_state(state.factors[name], state.gamma)
+    diag = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state.diag)[0]:
+        if leaf.size == 0:            # tagged params carry a (0,) placeholder
+            continue
+        key = "::".join(_key_str(k) for k in path)
+        diag[key] = leaf
+    return CurvatureBundle(
+        step=int(state.step), lam=float(state.lam), gamma=float(state.gamma),
+        eta=float(getattr(engine.cfg, "eta", 0.0)),
+        metas={name: blk.meta for name, blk in blocks.items()},
+        eigen=eigen, diag=diag)
+
+
+def _key_str(k) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
+# ---------------------------------------------------------------------------
+# save / load
+# ---------------------------------------------------------------------------
+
+def _to_store(arr: np.ndarray, key: str, dtype: str) -> np.ndarray:
+    if dtype == "bfloat16" and key in _BASIS_KEYS:
+        import ml_dtypes
+        return arr.astype(ml_dtypes.bfloat16).view(np.uint16)
+    return arr
+
+
+def _from_store(arr: np.ndarray, key: str, dtype: str) -> np.ndarray:
+    if dtype == "bfloat16" and key in _BASIS_KEYS:
+        import ml_dtypes
+        return arr.view(ml_dtypes.bfloat16).astype(np.float32)
+    return arr
+
+
+def save_bundle(bundle: CurvatureBundle, path: str,
+                dtype: str = "float32") -> str:
+    """Serialize ``bundle`` at ``path`` (atomic: tmp dir + rename + COMMIT).
+
+    ``dtype``: "float32" | "bfloat16" — storage precision of the
+    eigen*bases* only; diagonals always stay float32."""
+    if dtype not in ("float32", "bfloat16"):
+        raise ValueError(f"unknown bundle dtype {dtype!r}")
+    arrays: Dict[str, np.ndarray] = {}
+    for name in bundle.block_names:
+        for k in _EIG_KEYS:
+            v = bundle.eigen[name].get(k)
+            if v is None:
+                continue
+            arrays[f"eig::{name}::{k}"] = _to_store(
+                np.asarray(jax.device_get(v), np.float32), k, dtype)
+    for key, v in bundle.diag.items():
+        arrays[f"diag::{key}"] = np.asarray(jax.device_get(v), np.float32)
+    manifest = {
+        "schema": bundle.schema, "step": bundle.step,
+        "lam": bundle.lam, "gamma": bundle.gamma, "eta": bundle.eta,
+        "dtype": dtype,
+        "blocks": {name: _meta_to_json(bundle.metas[name])
+                   for name in bundle.block_names},
+        "keys": sorted(arrays), "time": time.time(),
+    }
+    tmp = path + ".tmp"
+    shutil.rmtree(tmp, ignore_errors=True)
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "COMMIT"), "w") as f:
+        f.write("ok")
+    shutil.rmtree(path, ignore_errors=True)
+    os.rename(tmp, path)
+    return path
+
+
+def load_bundle(path: str) -> CurvatureBundle:
+    """Load a bundle written by :func:`save_bundle` — engine-free: the
+    block metas come from the manifest, not from any model object."""
+    if not os.path.exists(os.path.join(path, "COMMIT")):
+        raise FileNotFoundError(f"no committed curvature bundle at {path!r}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        man = json.load(f)
+    if man["schema"] > BUNDLE_SCHEMA:
+        raise ValueError(f"bundle at {path!r} has schema {man['schema']} > "
+                         f"supported {BUNDLE_SCHEMA}")
+    dtype = man.get("dtype", "float32")
+    metas = {name: _meta_from_json(d) for name, d in man["blocks"].items()}
+    eigen: Dict[str, Dict[str, Any]] = {
+        name: {k: None for k in _EIG_KEYS} for name in metas}
+    diag: Dict[str, Any] = {}
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        for key in z.files:
+            if key.startswith("eig::"):
+                _, name, k = key.split("::", 2)
+                eigen[name][k] = _from_store(z[key], k, dtype)
+            elif key.startswith("diag::"):
+                diag[key[len("diag::"):]] = z[key]
+    return CurvatureBundle(
+        step=int(man["step"]), lam=float(man["lam"]),
+        gamma=float(man["gamma"]), eta=float(man["eta"]),
+        metas=metas, eigen=eigen, diag=diag, schema=int(man["schema"]))
+
+
+# ---------------------------------------------------------------------------
+# non-blocking export
+# ---------------------------------------------------------------------------
+
+class BundleWriter:
+    """Background bundle serializer (one in flight at a time, like the
+    Checkpointer's async save).  ``write_async`` returns immediately — the
+    snapshot's device arrays are immutable, so the daemon thread can fetch
+    and serialize them while training continues."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+
+    def write_async(self, path: str, bundle: CurvatureBundle,
+                    dtype: str = "float32") -> str:
+        self.wait()
+        self._thread = threading.Thread(
+            target=save_bundle, args=(bundle, path, dtype), daemon=True)
+        self._thread.start()
+        return path
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

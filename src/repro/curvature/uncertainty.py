@@ -1,0 +1,90 @@
+"""Laplace posterior predictive variance for uncertainty-aware decoding.
+
+Last-layer Laplace approximation over the bundle: treat the LM head weights
+as Gaussian around the trained values with covariance the *damped inverse
+Fisher* of the head block, ``Σ = (F_head + λI)^{-1}``.  For logits
+``z = Wᵀh`` the predictive variance of each logit is the quadratic form
+
+    var(z_v) = (h ⊗ e_v)ᵀ Σ (h ⊗ e_v)
+
+which is closed-form in the bundle's eigenbasis — no sampling, no extra
+matmuls beyond one ``d×d`` rotation shared across the vocabulary:
+
+* untied head (block ``lm_head``: ``a`` full over d_model, ``g`` diagonal
+  over vocab; ``s+damp`` shaped ``(d, V)``): with ``t = Q_Aᵀ h``,
+
+      var(z_v) = Σ_i t_i² / (s + damp)_{i,v}        —  ``(t²) @ M``
+
+* tied embeddings (block ``embed``: ``a`` diagonal over vocab, ``g`` full
+  over d_model; ``s+damp`` shaped ``(V, d)``): with ``t = Q_Gᵀ h``,
+
+      var(z_v) = Σ_j t_j² / (s + damp)_{v,j}        —  ``(t²) @ Mᵀ``
+
+Both collapse to one ``(B, d) @ (d, V)`` matmul against the precomputed
+reciprocal diagonal ``M`` — the uncertainty pass is a second head, batched
+alongside normal decode.  Variances are in units of the damped inverse
+empirical Fisher (the bundle's normalization); ``scale`` rescales them if a
+calibrated posterior (e.g. ``1/N``) is wanted.  All four reduced LM configs
+tie their embeddings, so the tied path is the serving default.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.curvature.bundle import CurvatureBundle
+
+
+class LaplaceHead:
+    """Closed-form per-token logit variance from a curvature bundle."""
+
+    def __init__(self, bundle: CurvatureBundle, *, scale: float = 1.0,
+                 floor: float = 1e-12):
+        name = self._head_block(bundle)
+        meta = bundle.metas[name]
+        eig = bundle.eigen[name]
+        inv_sd = 1.0 / (jnp.asarray(eig["s"], jnp.float32)
+                        + jnp.asarray(eig["damp"], jnp.float32) + floor)
+        if meta.kind == "head":        # untied: s+damp is (d_model, vocab)
+            rot = eig["qa"]
+            self.m = inv_sd
+        else:                          # tied "embed": s+damp is (vocab, d)
+            rot = eig["qg"]
+            self.m = inv_sd.T
+        self.rot = None if rot is None else jnp.asarray(rot, jnp.float32)
+        self.block = name
+        self.scale = float(scale)
+        self._var = jax.jit(self._variance_impl)
+
+    @staticmethod
+    def _head_block(bundle: CurvatureBundle) -> str:
+        for name, meta in bundle.metas.items():
+            if meta.kind == "head":
+                return name
+        for name, meta in bundle.metas.items():
+            if meta.kind == "embed":
+                return name
+        raise ValueError(
+            "bundle has no head/embed block — cannot build a Laplace head "
+            f"(blocks: {sorted(bundle.metas)})")
+
+    @classmethod
+    def from_path(cls, path: str, **kw) -> "LaplaceHead":
+        from repro.curvature.bundle import load_bundle
+        return cls(load_bundle(path), **kw)
+
+    # ------------------------------------------------------------------
+    def _variance_impl(self, h):
+        t = h.astype(jnp.float32)
+        if self.rot is not None:
+            t = t @ self.rot           # Qᵀh along the feature axis
+        return self.scale * ((t * t) @ self.m)
+
+    def variance(self, h):
+        """Per-logit predictive variance: ``(..., d_model) -> (..., vocab)``.
+
+        Traceable (pure jnp) — safe to call inside a jitted decode step."""
+        return self._variance_impl(h)
+
+    def __call__(self, h):
+        return self._var(h)

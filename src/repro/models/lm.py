@@ -795,8 +795,12 @@ class LM:
     # ------------------------------------------------------------------
     # serving: prefill + decode
     # ------------------------------------------------------------------
-    def prefill(self, params, batch):
-        """Full forward; returns (last-token logits, cache)."""
+    def prefill(self, params, batch, return_hidden: bool = False):
+        """Full forward; returns (last-token logits, cache) — or
+        (logits, cache, last-token hidden state) with ``return_hidden``
+        (the post-final-norm ``(B, d_model)`` features the Laplace
+        uncertainty head consumes; the default path is untouched so
+        compiled serving graphs stay bitwise-identical)."""
         cfg = self.cfg
         params = self._cast_params(params)
         tg = Tagger("plain")
@@ -820,9 +824,12 @@ class LM:
                              cfg.logit_softcap)
         if enc_out is not None:
             cache["enc_out"] = enc_out
+        if return_hidden:
+            return logits, cache, h[:, -1, :]
         return logits, cache
 
-    def decode_step(self, params, cache, tokens, pos, page_table=None):
+    def decode_step(self, params, cache, tokens, pos, page_table=None,
+                    return_hidden: bool = False):
         """One decode step. tokens: (B, 1); pos: scalar int32 position, or a
         ``(B,)`` vector of *per-slot* positions (continuous batching: each
         slot splices and attends at its own offset).
@@ -833,7 +840,10 @@ class LM:
         KV row into the slot's physical page and attends block-indexed
         through the table (``ops.flash_decode_paged``) — no dense per-row
         cache view is built.  Without it the leaves are the dense
-        ``(ng, B, S, hkv, hd)`` caches, spliced and attended as before."""
+        ``(ng, B, S, hkv, hd)`` caches, spliced and attended as before.
+
+        ``return_hidden`` additionally returns the post-final-norm
+        ``(B, d_model)`` hidden state (Laplace uncertainty input)."""
         cfg = self.cfg
         params = self._cast_params(params)
         tg = Tagger("plain")
@@ -868,6 +878,8 @@ class LM:
         logits = head_logits(h, self.head_weight(params), cfg.logit_softcap)
         if enc_out is not None:
             new_cache["enc_out"] = enc_out
+        if return_hidden:
+            return logits, new_cache, h[:, -1, :]
         return logits, new_cache
 
     # ------------------------------------------------------------------

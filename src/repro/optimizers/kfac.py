@@ -540,8 +540,8 @@ class KFACEngine:
         it with the fused ``update_chain`` kernel), so the global-norm clip
         folds into the parameter apply without ever re-reading the update.
 
-        With ``fixed_momentum == 0`` and ``clip_delta_norm == 0`` this is
-        bitwise the legacy three-stage path.  On T2 candidate steps the
+        With ``fixed_momentum == 0``, ``clip_delta_norm == 0`` and
+        ``kl_clip == 0`` this is bitwise the legacy three-stage path.  On T2 candidate steps the
         caller passes candidate 0's inverses/gamma (the legacy fixed-lr
         ``c_star = 0`` selection).  Returns (params', state', metrics)."""
         cfg = self.cfg
@@ -587,10 +587,20 @@ class KFACEngine:
                 vel = T.set_path(vel, path, d)
 
         norm = jnp.sqrt(sum(sqs) if sqs else jnp.float32(0.0))
+        factor = jnp.float32(1.0)
+        if cfg.kl_clip > 0:
+            # trust region on the Fisher quadratic of the applied step:
+            # vel already carries -lr, so |velᵀ∇| ≈ lr²·ΔᵀFΔ and
+            # ν = min(1, sqrt(max_kl / |velᵀ∇|))  (transform.with_kl_clip)
+            quad = jnp.abs(T.tree_dot(vel, grads_reg))
+            factor = factor * jnp.minimum(
+                jnp.float32(1.0),
+                jnp.sqrt(cfg.kl_clip / jnp.maximum(quad, 1e-20)))
         if cfg.clip_delta_norm > 0:
-            factor = jnp.minimum(
+            factor = factor * jnp.minimum(
                 jnp.float32(1.0),
                 cfg.clip_delta_norm / jnp.maximum(norm, 1e-20))
+        if cfg.kl_clip > 0 or cfg.clip_delta_norm > 0:
             new_params = jax.tree.map(
                 lambda p, d: p + (factor * d).astype(p.dtype), params, vel)
             delta_norm = factor * norm

@@ -48,6 +48,17 @@ The slot-serial reference engine (``serial_engine`` / ``batch_slots=1``)
 runs the identical compute path one request at a time; under greedy
 decoding the batched engine must match it token-for-token — including
 under eviction pressure (tiny page pools forcing mid-decode preemption).
+
+Uncertainty-aware decoding: constructed with a ``laplace`` head
+(:class:`repro.curvature.uncertainty.LaplaceHead`, built from a training
+curvature bundle), the engine serves ``Request(uncertainty=True)`` with a
+per-token Laplace predictive variance (``req.var``, parallel to
+``req.out``) — computed batched inside the decode jit from the hidden
+state the normal step already produces.  The uncertainty step functions
+are compiled *separately* and only invoked when an uncertainty request is
+actually in the batch, so ``uncertainty=False`` traffic runs the original
+compiled graphs and its outputs stay bitwise-identical to an engine built
+without a bundle (pinned by ``tests/test_curvature.py``).
 """
 from __future__ import annotations
 
@@ -78,6 +89,9 @@ class RunReport:
     unserved: List[Request] = field(default_factory=list)
     failed: List[Request] = field(default_factory=list)
     preemptions: int = 0
+    # mean per-token Laplace predictive variance across all served
+    # uncertainty=True tokens; None when no uncertainty was requested
+    mean_token_variance: float = None
 
     @property
     def truncated(self) -> bool:
@@ -92,7 +106,8 @@ class Engine:
 
     def __init__(self, model, params, *, batch_slots: int, max_len: int,
                  page_size: int = 8, num_pages: int = None,
-                 rng_seed: int = 0, decode_route: str = "paged"):
+                 rng_seed: int = 0, decode_route: str = "paged",
+                 laplace=None):
         if decode_route not in DECODE_ROUTES:
             raise ValueError(f"decode_route={decode_route!r} not in "
                              f"{DECODE_ROUTES}")
@@ -120,6 +135,14 @@ class Engine:
         self._prefill = jax.jit(model.prefill)
         self._step = jax.jit(self._decode_paged if decode_route == "paged"
                              else self._decode_gather)
+        # Laplace uncertainty head (repro.curvature): separate jits so the
+        # plain path's compiled graphs — and outputs — are untouched
+        self.laplace = laplace
+        if laplace is not None:
+            self._prefill_unc = jax.jit(self._prefill_with_var)
+            self._step_unc = jax.jit(
+                self._decode_paged_unc if decode_route == "paged"
+                else self._decode_gather_unc)
 
     # ------------------------------------------------------------------
     @property
@@ -156,6 +179,25 @@ class Engine:
         pools = self.kv.scatter_token(pools, new_dense, page_table, pos)
         return logits[:, -1], pools
 
+    # -- uncertainty variants: the same step + the Laplace variance head --
+    def _prefill_with_var(self, params, batch):
+        logits, cache, h = self.model.prefill(params, batch,
+                                              return_hidden=True)
+        return logits, cache, self.laplace.variance(h)
+
+    def _decode_paged_unc(self, params, pools, page_table, pos, toks):
+        logits, pools, h = self.model.decode_step(
+            params, pools, toks, pos, page_table=page_table,
+            return_hidden=True)
+        return logits[:, -1], pools, self.laplace.variance(h)
+
+    def _decode_gather_unc(self, params, pools, page_table, pos, toks):
+        dense = self.kv.gather(pools, page_table)
+        logits, new_dense, h = self.model.decode_step(
+            params, dense, toks, pos, return_hidden=True)
+        pools = self.kv.scatter_token(pools, new_dense, page_table, pos)
+        return logits[:, -1], pools, self.laplace.variance(h)
+
     def _sample(self, req: Request, logits_row) -> int:
         """One token for ``req``.  Greedy is the PR-7 argmax, bitwise; a
         seeded request draws token ``len(req.out)`` of its own stream
@@ -178,7 +220,11 @@ class Engine:
         capacity check is against the *total* pool (a request must be able
         to run alone) — admission itself reserves only prompt pages."""
         tp = len(req.prompt)
-        if tp == 0:
+        if req.uncertainty and self.laplace is None:
+            self.sched.reject(
+                req, "uncertainty requested but engine has no curvature "
+                     "bundle (construct with laplace=LaplaceHead(...))")
+        elif tp == 0:
             self.sched.reject(req, "empty prompt")
         elif tp > self.max_len:
             self.sched.reject(
@@ -278,8 +324,14 @@ class Engine:
                 bucket *= 2
             toks = [r.prompt for r, _ in group]
             toks += [toks[0]] * (bucket - len(group))   # rows discarded
-            logits, cache = self._prefill(
-                self.params, {"tokens": jnp.asarray(toks, jnp.int32)})
+            feed = {"tokens": jnp.asarray(toks, jnp.int32)}
+            want_unc = self.laplace is not None and any(
+                r.uncertainty for r, _ in group)
+            if want_unc:
+                logits, cache, var = self._prefill_unc(self.params, feed)
+                var = np.asarray(var)
+            else:
+                logits, cache = self._prefill(self.params, feed)
             logits = np.asarray(logits)
             for row, (req, slot) in enumerate(group):
                 self.pools = self.kv.write_prefill(
@@ -287,6 +339,8 @@ class Engine:
                 self.pos[slot] = tp
                 tok = self._sample(req, logits[row, -1])
                 req.out.append(tok)
+                if want_unc and req.uncertainty:
+                    req.var.append(float(var[row, tok]))
                 self.last_tok[slot, 0] = tok
                 ems.append((req, tok))
                 self._maybe_finish(slot)
@@ -301,9 +355,15 @@ class Engine:
         active = self.sched.active
         if not active:
             return ems
-        logits, self.pools = self._step(
-            self.params, self.pools, jnp.asarray(self.page_table),
-            jnp.asarray(self.pos), jnp.asarray(self.last_tok))
+        args = (self.params, self.pools, jnp.asarray(self.page_table),
+                jnp.asarray(self.pos), jnp.asarray(self.last_tok))
+        want_unc = self.laplace is not None and any(
+            self.sched.slots[s].uncertainty for s in active)
+        if want_unc:
+            logits, self.pools, var = self._step_unc(*args)
+            var = np.asarray(var)
+        else:
+            logits, self.pools = self._step(*args)
         logits = np.asarray(logits)              # (B, vocab) float32
         for s in active:
             self.pos[s] += 1                     # each wrote its last token
@@ -311,6 +371,8 @@ class Engine:
             req = self.sched.slots[s]
             tok = self._sample(req, logits[s])
             req.out.append(tok)
+            if want_unc and req.uncertainty:
+                req.var.append(float(var[s, tok]))
             self.last_tok[s, 0] = tok
             ems.append((req, tok))
             self._maybe_finish(s)
@@ -334,13 +396,16 @@ class Engine:
                 break
             self.step_once()
             steps += 1
+        token_vars = [v for r in requests for v in r.var]
         report = RunReport(
             steps=steps,
             completed=[r for r in requests if r.done],
             unfinished=[self.sched.slots[s] for s in self.sched.active],
             unserved=self.sched.queued,
             failed=list(self._failed),
-            preemptions=sum(r.preemptions for r in requests))
+            preemptions=sum(r.preemptions for r in requests),
+            mean_token_variance=(float(np.mean(token_vars))
+                                 if token_vars else None))
         if report.truncated:
             print(f"[serve] max_steps={max_steps} hit: "
                   f"{len(report.unfinished)} in flight, "
@@ -350,10 +415,11 @@ class Engine:
 
 
 def serial_engine(model, params, *, max_len: int, page_size: int = 8,
-                  rng_seed: int = 0, decode_route: str = "paged") -> Engine:
+                  rng_seed: int = 0, decode_route: str = "paged",
+                  laplace=None) -> Engine:
     """The slot-serial reference: one slot, so requests are served strictly
     one at a time through the *identical* compute path.  Under greedy
     decoding the batched engine must match this token-for-token."""
     return Engine(model, params, batch_slots=1, max_len=max_len,
                   page_size=page_size, rng_seed=rng_seed,
-                  decode_route=decode_route)
+                  decode_route=decode_route, laplace=laplace)

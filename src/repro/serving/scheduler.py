@@ -47,7 +47,11 @@ class Request:
     top_k: int = 0                 # 0 = no top-k filter
     top_p: float = 1.0             # 1.0 = no nucleus filter
     seed: Optional[int] = None     # None = legacy engine-shared RNG
+    uncertainty: bool = False      # request per-token Laplace variance
+                                   # (engine must carry a curvature bundle)
     out: List[int] = field(default_factory=list)
+    var: List[float] = field(default_factory=list)  # per-token predictive
+                                   # variance, parallel to ``out``
     done: bool = False
     error: Optional[str] = None
     state: str = QUEUED
@@ -102,6 +106,7 @@ class Scheduler:
         identical stream from scratch."""
         req = self.release(slot, done=False)
         req.out.clear()
+        req.var.clear()
         req.preemptions += 1
         self.queue.appendleft(req)
         return req

@@ -12,8 +12,11 @@ steps masked by a per-slot length vector.
 The engine has since grown block-indexed paged-attention decode (the page
 table rides into the kernel; ``decode_route="gather"`` keeps the dense
 gather view as the differential oracle), eviction/preemption under page
-pressure, batched grouped prefill, and per-request sampling
-(``sampling``: greedy / top-k / top-p with per-request seeds).
+pressure, batched grouped prefill, per-request sampling
+(``sampling``: greedy / top-k / top-p with per-request seeds), and
+uncertainty-aware decoding: built with ``laplace=LaplaceHead(bundle)``
+(``repro.curvature``) the engine serves ``Request(uncertainty=True)``
+with per-token Laplace predictive variance (see ``docs/influence.md``).
 
 Import from here for the stable entry points; the submodules hold the
 pieces:

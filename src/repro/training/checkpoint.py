@@ -27,6 +27,14 @@ State-schema versions (``manifest.json["schema"]``):
      an overlap template (flipping refresh_mode on an existing run) seeds
      the double buffer from the template — pinned by
      ``test_checkpoint_refresh_mode_switch``.
+  4: manifest-only change — an optional ``curvature_bundle`` key pointing
+     (relative to the checkpoint directory) at the EKFAC curvature bundle
+     exported alongside this step (``repro.curvature.bundle``; bundles
+     live in a sibling ``curvature/`` dir, never inside the step dir,
+     because the step dir is renamed asynchronously).  No state leaves
+     changed, so restore logic is untouched: v3 checkpoints restore
+     verbatim (they just have no bundle — ``bundle_path`` returns None),
+     pinned by ``test_checkpoint_v3_state_migration``.
 """
 from __future__ import annotations
 
@@ -41,7 +49,7 @@ import jax
 import numpy as np
 
 SEP = "::"
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 # state fields that did not exist before schema 3: restoring an older
 # checkpoint keeps the template's (fresh-init) values for these
@@ -98,28 +106,38 @@ class Checkpointer:
         os.makedirs(directory, exist_ok=True)
 
     # -- save ------------------------------------------------------------
-    def save(self, step: int, tree, block: bool = False):
+    def save(self, step: int, tree, block: bool = False,
+             curvature_bundle: Optional[str] = None):
+        """``curvature_bundle``: optional manifest pointer (schema 4) to a
+        bundle exported for this step, as a path relative to ``self.dir``
+        (the bundle itself is written separately — see
+        ``repro.curvature.bundle.BundleWriter``)."""
         flat = _flatten(tree)
         # fetch to host synchronously (cheap vs I/O), write in background
         host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
         self.wait()
         if self.async_save and not block:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host), daemon=True)
+                target=self._write, args=(step, host, curvature_bundle),
+                daemon=True)
             self._thread.start()
         else:
-            self._write(step, host)
+            self._write(step, host, curvature_bundle)
 
-    def _write(self, step: int, host: Dict[str, np.ndarray]):
+    def _write(self, step: int, host: Dict[str, np.ndarray],
+               curvature_bundle: Optional[str] = None):
         final = os.path.join(self.dir, f"step_{step:08d}")
         tmp = final + ".tmp"
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp, exist_ok=True)
         np.savez(os.path.join(tmp, "arrays.npz"),
                  **{k: v for k, v in host.items()})
+        manifest = {"step": step, "schema": SCHEMA_VERSION,
+                    "keys": sorted(host), "time": time.time()}
+        if curvature_bundle is not None:
+            manifest["curvature_bundle"] = curvature_bundle
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump({"step": step, "schema": SCHEMA_VERSION,
-                       "keys": sorted(host), "time": time.time()}, f)
+            json.dump(manifest, f)
         with open(os.path.join(tmp, "COMMIT"), "w") as f:
             f.write("ok")
         shutil.rmtree(final, ignore_errors=True)
@@ -136,6 +154,10 @@ class Checkpointer:
         for s in steps[:-self.keep] if self.keep else []:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
                           ignore_errors=True)
+            # drop the step's curvature bundle (sibling dir) with it
+            shutil.rmtree(
+                os.path.join(self.dir, "curvature", f"step_{s:08d}"),
+                ignore_errors=True)
 
     # -- restore ---------------------------------------------------------
     def all_steps(self):
@@ -150,6 +172,25 @@ class Checkpointer:
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def bundle_path(self, step: Optional[int] = None) -> Optional[str]:
+        """Absolute path of the curvature bundle the manifest points at
+        (schema 4), or None — older schemas, runs without curvature
+        export, or a torn/missing bundle all report None."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None
+        man = os.path.join(self.dir, f"step_{step:08d}", "manifest.json")
+        if not os.path.exists(man):
+            return None
+        with open(man) as f:
+            rel = json.load(f).get("curvature_bundle")
+        if rel is None:
+            return None
+        full = os.path.join(self.dir, rel)
+        if not os.path.exists(os.path.join(full, "COMMIT")):
+            return None
+        return full
 
     def restore(self, template, step: Optional[int] = None,
                 shardings=None):

@@ -43,6 +43,7 @@ class Trainer:
         self.mesh = mesh
         self.ckpt = checkpointer
         self._preempted = False
+        self._bundle_writer = None
         self._install_handlers()
 
     # ------------------------------------------------------------------
@@ -106,7 +107,9 @@ class Trainer:
 
             if self.ckpt is not None and (
                     (step + 1) % self.tc.checkpoint_every == 0):
-                self.ckpt.save(step + 1, {"params": params, "state": state})
+                bundle_ref = self._export_bundle(step + 1, state, log)
+                self.ckpt.save(step + 1, {"params": params, "state": state},
+                               curvature_bundle=bundle_ref)
 
             if self._preempted:
                 log(f"[trainer] preempted at step {step}; checkpointing")
@@ -117,5 +120,37 @@ class Trainer:
 
         if self.ckpt is not None:
             self.ckpt.wait()
+        if self._bundle_writer is not None:
+            self._bundle_writer.wait()
         return {"params": params, "state": state, "history": history,
                 "seconds": time.time() - t_start}
+
+    # ------------------------------------------------------------------
+    def _export_bundle(self, step: int, state, log) -> Optional[str]:
+        """Non-blocking curvature-bundle export at checkpoint steps
+        (``TrainConfig.curvature_every``; 0 = off).  Snapshotting only
+        captures immutable device-array references on the training thread
+        (the ``OverlapController`` idea); serialization runs on the
+        :class:`~repro.curvature.bundle.BundleWriter` daemon thread.
+        Returns the manifest-relative bundle path, or None."""
+        import os
+
+        if (not self.tc.curvature_every
+                or step % self.tc.curvature_every != 0):
+            return None
+        engine = getattr(self.opt, "engine", None)
+        if engine is None or not getattr(engine, "blocks", None):
+            return None   # first-order baselines carry no curvature
+        from repro.curvature.bundle import BundleWriter, snapshot_bundle
+
+        opt_state = state.inner if hasattr(state, "inner") else state
+        bundle = snapshot_bundle(engine, opt_state)
+        if bundle is None:
+            return None
+        if self._bundle_writer is None:
+            self._bundle_writer = BundleWriter()
+        rel = os.path.join("curvature", f"step_{step:08d}")
+        self._bundle_writer.write_async(
+            os.path.join(self.ckpt.dir, rel), bundle)
+        log(f"[trainer] step {step - 1}: curvature bundle -> {rel}")
+        return rel

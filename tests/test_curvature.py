@@ -1,0 +1,466 @@
+"""Curvature-as-a-product: bundles, EKFAC iHVP/influence, Laplace serving.
+
+The subsystem's acceptance pins:
+  * bundle save/load roundtrip (f32 exact, bf16 within basis tolerance),
+    loadable with no optimizer or engine in sight;
+  * iHVP == dense ``(F + λI)^{-1} v`` against the explicit damped
+    Kronecker oracle (property-tested over query vectors and query-time
+    extra damping);
+  * batched Pallas ``rotate_rescale`` route == einsum route on a tileable
+    block;
+  * LaplaceHead's closed-form logit variance == the dense quadratic form;
+  * serving: ``uncertainty=True`` yields one finite variance per emitted
+    token; ``uncertainty=False`` through a bundle-loaded engine is
+    token-identical to an engine with no bundle at all (the regression
+    pin that the uncertainty path costs nothing when unused);
+  * trainer exports a checkpoint-adjacent bundle (schema-4 manifest
+    pointer) that reloads into a working InfluenceEngine.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.configs.base import KFACConfig, TrainConfig
+from repro.core.blocks import build_blocks
+from repro.core.inverse import pi_trace
+from repro.core.tags import LayerMeta
+from repro.curvature import (CurvatureBundle, InfluenceEngine, LaplaceHead,
+                             load_bundle, per_example_grads, save_bundle,
+                             snapshot_bundle)
+from repro.models.lm import LM
+from repro.models.mlp import MLP
+from repro.optimizers import kfac
+from repro.serving.server import Engine, Request
+from repro.utils import tree as T
+
+DIMS = [8, 6, 4]
+
+
+def _mlp_problem(seed=0, batch=32):
+    mlp = MLP(DIMS, loss="bernoulli")
+    params = mlp.init_params(jax.random.PRNGKey(seed), sparse=False)
+    x = jax.random.bernoulli(jax.random.PRNGKey(seed + 1), 0.5,
+                             (batch, DIMS[0])).astype(jnp.float32)
+    return mlp, params, {"x": x, "y": x[:, :DIMS[-1]]}
+
+
+def _train(inv_mode="blkdiag", steps=6, seed=0):
+    """A few EKFAC steps -> (model, params, batch, engine, state)."""
+    mlp, params, batch = _mlp_problem(seed)
+    opt = kfac(mlp, KFACConfig(inv_mode=inv_mode, lambda_init=2.0, t3=3),
+               family="bernoulli")
+    state = opt.init(params, batch)
+    for step in range(steps):
+        params, state, _ = opt.update(
+            None, state, params, batch,
+            jax.random.fold_in(jax.random.PRNGKey(7), step))
+    return mlp, params, batch, opt, state
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """blkdiag-mode training state: ``snapshot_bundle`` then computes a
+    *fresh* eigen state from the running factors, so ``apply_eigen``
+    equals the damped dense inverse exactly (the eigen-mode live state has
+    its ``s`` blended by the per-step EKFAC rescale and is only ~1e-3
+    close — the oracle test must use this fixture)."""
+    return _train(inv_mode="blkdiag")
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = get_reduced_config("smollm-135m")
+    lm = LM(cfg)
+    return lm, lm.init_params(jax.random.PRNGKey(0)), cfg
+
+
+def _identity_laplace(lm):
+    """Zero factors + gamma=1 -> s=0, damp=1: variance(h) == |h|² exactly
+    (the final RMS-norm makes |h|² == d_model), a closed-form end-to-end
+    check of the serving variance plumbing."""
+    name = "lm_head" if "lm_head" in lm.metas else "embed"
+    meta = lm.metas[name]
+    blk = build_blocks({name: meta}, KFACConfig())[name]
+    eig = blk.eigen_state(blk.init_factors(), 1.0)
+    return LaplaceHead(CurvatureBundle(
+        step=0, lam=1.0, gamma=1.0, eta=0.0,
+        metas={name: meta}, eigen={name: eig}))
+
+
+def _reqs(cfg, spec, uncertainty=False):
+    return [Request(uid=u, prompt=[(7 * u + j) % cfg.vocab_size
+                                   for j in range(tp)], max_new=mn,
+                    uncertainty=uncertainty)
+            for u, tp, mn in spec]
+
+
+# ---------------------------------------------------------------------------
+# bundle roundtrip
+# ---------------------------------------------------------------------------
+
+def test_bundle_roundtrip_f32(tmp_path, trained):
+    mlp, params, batch, opt, state = trained
+    bundle = snapshot_bundle(opt.engine, state)
+    path = str(tmp_path / "b32")
+    save_bundle(bundle, path)
+    got = load_bundle(path)
+    assert got.schema == bundle.schema
+    assert got.step == bundle.step
+    assert got.block_names == bundle.block_names
+    np.testing.assert_allclose(got.lam, bundle.lam)
+    np.testing.assert_allclose(got.gamma, bundle.gamma)
+    for name in bundle.block_names:
+        assert got.metas[name] == bundle.metas[name]  # engine-free metas
+        for k in ("qa", "qg", "s", "damp"):
+            a, b = bundle.eigen[name].get(k), got.eigen[name].get(k)
+            if a is None:
+                assert b is None
+            else:
+                np.testing.assert_array_equal(np.asarray(a), b)
+    # the loaded bundle drives an identical iHVP without any engine/model
+    grads = per_example_grads(mlp, params, batch)
+    g0 = jax.tree.map(lambda a: a[0], grads)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), b),
+        InfluenceEngine(bundle).ihvp(g0), InfluenceEngine(got).ihvp(g0))
+
+
+def test_bundle_roundtrip_bf16(tmp_path, trained):
+    _, _, _, opt, state = trained
+    bundle = snapshot_bundle(opt.engine, state)
+    path = str(tmp_path / "b16")
+    save_bundle(bundle, path, dtype="bfloat16")
+    got = load_bundle(path)
+    for name in bundle.block_names:
+        for k in ("s", "damp"):          # curvature magnitudes stay exact
+            np.testing.assert_array_equal(
+                np.asarray(bundle.eigen[name][k]), got.eigen[name][k])
+        for k in ("qa", "qg"):           # bases round-trip at bf16 precision
+            a = bundle.eigen[name].get(k)
+            if a is not None:
+                np.testing.assert_allclose(np.asarray(a),
+                                           got.eigen[name][k], atol=8e-3)
+
+
+def test_torn_bundle_refused(tmp_path, trained):
+    _, _, _, opt, state = trained
+    path = str(tmp_path / "torn")
+    save_bundle(snapshot_bundle(opt.engine, state), path)
+    (tmp_path / "torn" / "COMMIT").unlink()
+    with pytest.raises(FileNotFoundError):
+        load_bundle(path)
+
+
+# ---------------------------------------------------------------------------
+# iHVP vs the dense damped-Kronecker oracle
+# ---------------------------------------------------------------------------
+
+def _dense_oracle(engine, state, grads, extra=0.0):
+    """Explicit ``(F_i + damping)^{-1} vec(V_i)`` per block: materialize
+    the damped Kronecker product and invert it."""
+    out = {}
+    for name, blk in engine.blocks.items():
+        m = blk.meta
+        fac = state.factors[name]
+        a = np.asarray(fac["a"], np.float64)
+        g = np.asarray(fac["g"], np.float64)
+        pi = float(pi_trace(fac["a"], m.a_kind, m.a_dim,
+                            fac["g"], m.g_kind, m.g_dim))
+        gamma = float(state.gamma)
+        f = np.kron(a + pi * gamma * np.eye(m.a_dim),
+                    g + gamma / pi * np.eye(m.g_dim))
+        f += extra * np.eye(f.shape[0])
+        v = np.asarray(T.get_path(grads, m.param_path),
+                       np.float64).reshape(-1)
+        out[name] = np.linalg.solve(f, v).reshape(m.a_dim, m.g_dim)
+    return out
+
+
+def _random_tree(params, seed):
+    leaves, treedef = jax.tree.flatten(params)
+    return jax.tree.unflatten(treedef, [
+        jax.random.normal(
+            jax.random.fold_in(jax.random.PRNGKey(seed), i), p.shape)
+        for i, p in enumerate(leaves)])
+
+
+@pytest.mark.parametrize("seed,extra", [(0, 0.0), (1, 0.0), (2, 0.5),
+                                        (3, 3.0)])
+def test_ihvp_matches_dense_oracle(trained, seed, extra):
+    """Deterministic oracle pin (always runs — the hypothesis sweep below
+    widens the same property when hypothesis is installed)."""
+    mlp, params, batch, opt, state = trained
+    eng = InfluenceEngine(snapshot_bundle(opt.engine, state),
+                          extra_damping=extra)
+    v = _random_tree(params, seed)
+    got = eng.ihvp(v)
+    want = _dense_oracle(eng, state, v, extra=extra)
+    for name, blk in eng.blocks.items():
+        np.testing.assert_allclose(
+            np.asarray(T.get_path(got, blk.meta.param_path)),
+            want[name], rtol=2e-4, atol=2e-5,
+            err_msg=f"block {name} (extra_damping={extra})")
+
+
+def test_ihvp_matches_dense_oracle_property(trained):
+    hyp = pytest.importorskip(
+        "hypothesis", reason="hypothesis not installed")
+    del hyp
+    from hypothesis import given, settings, strategies as st
+
+    mlp, params, batch, opt, state = trained
+    bundle = snapshot_bundle(opt.engine, state)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1),
+           st.floats(min_value=0.0, max_value=5.0))
+    def check(seed, extra):
+        v = _random_tree(params, seed)
+        eng = InfluenceEngine(bundle, extra_damping=extra)
+        got = eng.ihvp(v)
+        want = _dense_oracle(eng, state, v, extra=extra)
+        for name, blk in eng.blocks.items():
+            np.testing.assert_allclose(
+                np.asarray(T.get_path(got, blk.meta.param_path)),
+                want[name], rtol=2e-4, atol=2e-5,
+                err_msg=f"block {name} (extra_damping={extra})")
+
+    check()
+
+
+def test_ihvp_batched_consistent_with_single(trained):
+    mlp, params, batch, opt, state = trained
+    eng = InfluenceEngine(snapshot_bundle(opt.engine, state))
+    grads = per_example_grads(
+        mlp, params, jax.tree.map(lambda x: x[:6], batch))
+    stacked = eng.ihvp_batched(grads)
+    for i in range(6):
+        one = eng.ihvp(jax.tree.map(lambda a: a[i], grads))
+        jax.tree_util.tree_map(
+            lambda s, o, i=i: np.testing.assert_allclose(
+                np.asarray(s[i]), np.asarray(o), rtol=1e-5, atol=1e-6),
+            stacked, one)
+
+
+def test_ihvp_batched_pallas_matches_xla():
+    """The Pallas batched ``rotate_rescale`` route vs the einsum fallback
+    on a tileable 128x128 dense block (the MLP's homogeneous a_dims never
+    satisfy ``tile_ok``, so the parity claim needs a synthetic block)."""
+    meta = LayerMeta(name="d128", param_path=("w",), d_in=128, d_out=128)
+    a = jax.random.normal(jax.random.PRNGKey(0), (512, 128)) / 16.0
+    g = jax.random.normal(jax.random.PRNGKey(1), (512, 128)) / 16.0
+    fac = {"a": a.T @ a + 0.1 * jnp.eye(128),
+           "g": g.T @ g + 0.1 * jnp.eye(128)}
+    vs = jax.random.normal(jax.random.PRNGKey(2), (4, 128, 128))
+    outs = {}
+    for backend in ("xla", "pallas"):
+        blk = build_blocks({"d128": meta},
+                           KFACConfig(kernel_backend=backend))["d128"]
+        eig = blk.eigen_state(fac, 0.1)
+        outs[backend] = np.asarray(blk.ihvp_batched(eig, vs))
+    np.testing.assert_allclose(outs["pallas"], outs["xla"],
+                               rtol=5e-4, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# influence scores
+# ---------------------------------------------------------------------------
+
+def test_influence_scores_and_topk(trained):
+    mlp, params, batch, opt, state = trained
+    eng = InfluenceEngine(snapshot_bundle(opt.engine, state))
+    grads = per_example_grads(mlp, params, batch)
+    q = 3
+    scores = np.asarray(eng.influence(
+        jax.tree.map(lambda a: a[q], grads), grads))
+    assert scores.shape == (batch["x"].shape[0],)
+    assert np.isfinite(scores).all()
+    # the query's own score is its (positive) self-influence
+    si = np.asarray(eng.self_influence(grads))
+    assert (si > 0).all()
+    np.testing.assert_allclose(scores[q], si[q], rtol=1e-4)
+    # top-k is the argsort head
+    vals, idx = eng.topk(jnp.asarray(scores), 5)
+    order = np.argsort(-scores)[:5]
+    np.testing.assert_array_equal(np.asarray(idx), order)
+    np.testing.assert_allclose(np.asarray(vals), scores[order], rtol=1e-6)
+
+
+def test_extra_damping_shrinks_self_influence(trained):
+    mlp, params, batch, opt, state = trained
+    bundle = snapshot_bundle(opt.engine, state)
+    grads = per_example_grads(
+        mlp, params, jax.tree.map(lambda x: x[:4], batch))
+    si0 = np.asarray(InfluenceEngine(bundle).self_influence(grads))
+    si1 = np.asarray(
+        InfluenceEngine(bundle, extra_damping=10.0).self_influence(grads))
+    assert (si1 < si0).all()
+
+
+# ---------------------------------------------------------------------------
+# Laplace head
+# ---------------------------------------------------------------------------
+
+def test_laplace_variance_matches_dense_quadratic_form():
+    """Tied-embed bundle (diag a over vocab, full g over d_model): the
+    one-matmul closed form must equal the explicit quadratic form
+    ``hᵀ (G + γ/π I)^{-1} h / (a_v + π γ)`` for every logit v."""
+    V, d, gamma = 7, 5, 0.3
+    meta = LayerMeta(name="embed", param_path=("emb",), d_in=V, d_out=d,
+                     kind="embed", a_kind="diag", g_kind="full")
+    a = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (V,))) + 0.1
+    gm = jax.random.normal(jax.random.PRNGKey(1), (32, d)) / 4.0
+    fac = {"a": a, "g": gm.T @ gm + 0.05 * jnp.eye(d)}
+    blk = build_blocks({"embed": meta}, KFACConfig())["embed"]
+    bundle = CurvatureBundle(
+        step=0, lam=gamma * gamma, gamma=gamma, eta=0.0,
+        metas={"embed": meta},
+        eigen={"embed": blk.eigen_state(fac, gamma)})
+    h = jax.random.normal(jax.random.PRNGKey(2), (3, d))
+    got = np.asarray(LaplaceHead(bundle)(h))
+
+    pi = float(pi_trace(fac["a"], "diag", V, fac["g"], "full", d))
+    ginv = np.linalg.inv(np.asarray(fac["g"], np.float64)
+                         + gamma / pi * np.eye(d))
+    quad = np.einsum("bi,ij,bj->b", np.asarray(h, np.float64),
+                     ginv, np.asarray(h, np.float64))
+    want = quad[:, None] / (np.asarray(a, np.float64)[None, :] + pi * gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+    assert (got > 0).all()
+
+
+def test_laplace_head_requires_head_block(trained):
+    _, _, _, opt, state = trained     # MLP bundle: dense blocks only
+    with pytest.raises(ValueError):
+        LaplaceHead(snapshot_bundle(opt.engine, state))
+
+
+# ---------------------------------------------------------------------------
+# serving integration
+# ---------------------------------------------------------------------------
+
+def test_serving_uncertainty_per_token_variance(smollm):
+    lm, params, cfg = smollm
+    eng = Engine(lm, params, batch_slots=2, max_len=32,
+                 laplace=_identity_laplace(lm))
+    reqs = _reqs(cfg, [(0, 3, 5), (1, 5, 4), (2, 4, 6)], uncertainty=True)
+    rep = eng.run(reqs)
+    for r in reqs:
+        assert r.done and r.error is None
+        assert len(r.var) == len(r.out)          # one variance per token
+        assert np.isfinite(r.var).all() and (np.asarray(r.var) > 0).all()
+        # identity bundle + final RMS-norm: var == |h|² == d_model exactly
+        np.testing.assert_allclose(r.var, float(cfg.d_model), rtol=1e-4)
+    np.testing.assert_allclose(rep.mean_token_variance,
+                               float(cfg.d_model), rtol=1e-4)
+
+
+def test_serving_plain_path_unperturbed_by_bundle(smollm):
+    """The acceptance pin: loading a bundle must not change
+    ``uncertainty=False`` decoding at all — same tokens, and the report
+    carries no variance."""
+    lm, params, cfg = smollm
+    spec = [(0, 3, 6), (1, 5, 4), (2, 4, 8), (3, 2, 5)]
+    plain = _reqs(cfg, spec)
+    rep0 = Engine(lm, params, batch_slots=2, max_len=32).run(plain)
+    with_bundle = _reqs(cfg, spec)
+    rep1 = Engine(lm, params, batch_slots=2, max_len=32,
+                  laplace=_identity_laplace(lm)).run(with_bundle)
+    for a, b in zip(plain, with_bundle):
+        assert a.out == b.out, "bundle-loaded engine perturbed plain decode"
+        assert b.var == []
+    assert rep0.mean_token_variance is None
+    assert rep1.mean_token_variance is None
+    assert rep0.steps == rep1.steps
+
+
+def test_serving_mixed_uncertainty_batch(smollm):
+    """uncertainty=True and =False requests share a batch: variance lands
+    only on the requesting one and the other still decodes the same."""
+    lm, params, cfg = smollm
+    solo = _reqs(cfg, [(0, 4, 6)])
+    Engine(lm, params, batch_slots=2, max_len=32).run(solo)
+    mixed = _reqs(cfg, [(0, 4, 6)]) + _reqs(cfg, [(1, 3, 6)],
+                                            uncertainty=True)
+    Engine(lm, params, batch_slots=2, max_len=32,
+           laplace=_identity_laplace(lm)).run(mixed)
+    assert mixed[0].out == solo[0].out
+    assert mixed[0].var == []
+    assert len(mixed[1].var) == len(mixed[1].out) > 0
+
+
+def test_submit_rejects_uncertainty_without_bundle(smollm):
+    lm, params, cfg = smollm
+    eng = Engine(lm, params, batch_slots=2, max_len=32)   # no laplace
+    bad = _reqs(cfg, [(0, 3, 4)], uncertainty=True)[0]
+    ok = _reqs(cfg, [(1, 3, 4)])[0]
+    rep = eng.run([bad, ok])
+    assert bad.error is not None and "bundle" in bad.error
+    assert not bad.out
+    assert ok.done and ok.error is None and len(ok.out) == 4
+    assert len(rep.completed) == 1
+
+
+# ---------------------------------------------------------------------------
+# trainer export -> checkpoint-adjacent bundle
+# ---------------------------------------------------------------------------
+
+def test_trainer_exports_checkpoint_adjacent_bundle(tmp_path):
+    from repro.training.checkpoint import Checkpointer
+    from repro.training.trainer import Trainer
+
+    mlp, params, _ = _mlp_problem()
+
+    class Data:
+        def batch(self, step):
+            x = jax.random.bernoulli(
+                jax.random.fold_in(jax.random.PRNGKey(5), step), 0.5,
+                (32, DIMS[0])).astype(jnp.float32)
+            return {"x": x, "y": x[:, :DIMS[-1]]}
+
+    opt = kfac(mlp, KFACConfig(inv_mode="eigen", lambda_init=2.0, t3=2),
+               family="bernoulli")
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    tr = Trainer(mlp, opt, TrainConfig(steps=6, checkpoint_every=3,
+                                       curvature_every=3, log_every=100),
+                 None, ck)
+    out = tr.fit(params, Data(), steps=6, log=lambda *_: None)
+    assert ck.latest_step() == 6
+    path = ck.bundle_path()
+    assert path is not None and path.endswith("step_00000006")
+    bundle = load_bundle(path)
+    assert bundle.step == 6
+    assert set(bundle.block_names) == set(opt.engine.blocks)
+    # the exported bundle drives influence queries with no optimizer
+    data = Data()
+    grads = per_example_grads(mlp, out["params"], data.batch(0))
+    si = np.asarray(InfluenceEngine(bundle).self_influence(grads))
+    assert np.isfinite(si).all() and (si > 0).all()
+    # ... and the checkpoint itself still restores (manifest-only change)
+    step, got = ck.restore({"params": params,
+                            "state": opt.init(params, data.batch(0))})
+    assert step == 6
+
+
+def test_trainer_without_curvature_every_exports_nothing(tmp_path):
+    from repro.training.checkpoint import Checkpointer
+    from repro.training.trainer import Trainer
+
+    mlp, params, _ = _mlp_problem()
+
+    class Data:
+        def batch(self, step):
+            x = jax.random.bernoulli(
+                jax.random.fold_in(jax.random.PRNGKey(5), step), 0.5,
+                (32, DIMS[0])).astype(jnp.float32)
+            return {"x": x, "y": x[:, :DIMS[-1]]}
+
+    opt = kfac(mlp, KFACConfig(lambda_init=2.0), family="bernoulli")
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    tr = Trainer(mlp, opt, TrainConfig(steps=4, checkpoint_every=2,
+                                       log_every=100), None, ck)
+    tr.fit(params, Data(), steps=4, log=lambda *_: None)
+    assert ck.latest_step() == 4
+    assert ck.bundle_path() is None

@@ -73,7 +73,7 @@ def test_checkpoint_dict_state_migration(tmp_path):
     # to simulate a genuinely old (schema-1, pre-version-field) checkpoint
     man_path = tmp_path / "step_00000003" / "manifest.json"
     man = _json.loads(man_path.read_text())
-    assert man["schema"] == 3
+    assert man["schema"] == 4
     del man["schema"]
     man_path.write_text(_json.dumps(man))
 
@@ -158,6 +158,61 @@ def test_checkpoint_v2_state_migration(tmp_path):
         assert False, "expected missing-leaf error"
     except KeyError as e:
         assert "lam" in str(e)
+
+
+def test_checkpoint_v3_state_migration(tmp_path):
+    """Schema 3 -> 4 is manifest-only (the optional ``curvature_bundle``
+    pointer): a v3 checkpoint — same leaves, no pointer — must restore
+    verbatim, with ``bundle_path`` reporting None; a future schema must
+    refuse."""
+    import json as _json
+
+    from repro import optimizers
+
+    mlp = MLP([16, 8, 16], loss="bernoulli")
+    params = mlp.init_params(jax.random.PRNGKey(0), sparse=False)
+    data = SyntheticAutoencoderData(16, 4, 64, seed=1)
+    batch = data.batch(0)
+    opt = optimizers.kfac(mlp, KFACConfig(lambda_init=1.0),
+                          family="bernoulli")
+    state = opt.init(params, batch)
+    params, state, _ = opt.update(None, state, params, batch,
+                                  jax.random.PRNGKey(1))
+
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(6, {"params": params, "state": state}, block=True)
+
+    # rewrite as a genuine v3: stamp the old schema, drop any v4 key
+    man_path = tmp_path / "step_00000006" / "manifest.json"
+    man = _json.loads(man_path.read_text())
+    man["schema"] = 3
+    man.pop("curvature_bundle", None)
+    man_path.write_text(_json.dumps(man))
+
+    template = opt.init(params, batch)
+    step, got = ck.restore({"params": params, "state": template})
+    assert step == 6
+    assert ck.bundle_path(6) is None
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(a, b),
+        got["state"].factors, state.factors)
+    np.testing.assert_array_equal(got["state"].lam, state.lam)
+
+    # a pointer at a torn/absent bundle also reports None (never a path
+    # that would fail to load)
+    man["schema"] = 4
+    man["curvature_bundle"] = "curvature/step_00000006"
+    man_path.write_text(_json.dumps(man))
+    assert ck.bundle_path(6) is None
+
+    # a future schema must refuse to restore rather than misread
+    man["schema"] = 5
+    man_path.write_text(_json.dumps(man))
+    try:
+        ck.restore({"params": params, "state": template})
+        assert False, "expected schema-version error"
+    except ValueError as e:
+        assert "schema" in str(e)
 
 
 def test_checkpoint_refresh_mode_switch(tmp_path):

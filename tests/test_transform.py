@@ -326,6 +326,71 @@ def test_from_transform_requires_model_or_grads():
     assert float(metrics["delta_norm"]) > 0
 
 
+def test_with_kl_clip_matches_hand_rolled():
+    """ν = min(1, sqrt(max_kl / (lr²·|Δᵀg|))) against an explicit
+    reference, wrapping a plain lr scale (Δ = -lr·g ⇒ |Δᵀg| = lr·|g|²)."""
+    g = {"w": jnp.array([3.0, -4.0]), "b": jnp.array([1.0, 2.0, -2.0])}
+    p = T.tree_scale(g, 0.0)
+    lr, max_kl = 0.1, 1e-3
+    tx = TX.with_kl_clip(TX.scale(-lr), max_kl, lr=1.0)
+    out, _ = tx.update(g, tx.init(p), p)
+
+    delta = T.tree_scale(g, -lr)
+    quad = abs(float(T.tree_dot(delta, g)))
+    nu = min(1.0, float(np.sqrt(max_kl / quad)))
+    assert nu < 1.0                       # the clip actually engaged
+    jax.tree_util.tree_map(
+        lambda o, d: np.testing.assert_allclose(o, nu * d, rtol=1e-6),
+        out, delta)
+
+    # generous budget: passthrough, bitwise
+    tx2 = TX.with_kl_clip(TX.scale(-lr), 1e6, lr=1.0)
+    out2, _ = tx2.update(g, tx2.init(p), p)
+    _assert_trees_equal(out2, delta)
+
+    # the explicit-lr form: inner emits the raw direction Δ = -g and the
+    # caller applies lr·Δ, so the trust region is on lr²·|Δᵀg|
+    tx3 = TX.with_kl_clip(TX.scale(-1.0), max_kl, lr=lr)
+    out3, _ = tx3.update(g, tx3.init(p), p)
+    nu3 = min(1.0, float(np.sqrt(
+        max_kl / (lr * lr * abs(float(T.tree_dot(g, g)))))))
+    jax.tree_util.tree_map(
+        lambda o, gg: np.testing.assert_allclose(o, -nu3 * gg, rtol=1e-6),
+        out3, g)
+
+
+def test_kfac_kl_clip_engine_paths():
+    """KFACConfig.kl_clip on the fused fixed-lr update: a generous budget
+    is bitwise-identical to kl_clip=0 (off), a tight one shrinks every
+    step and tracks the hand-computed ν."""
+    mlp, params, data = _problem(dims=(16, 8, 16), n=64)
+    batch = data.batch(0)
+
+    def run(kl_clip, steps=4):
+        cfg = KFACConfig(inv_mode="blkdiag", use_rescale=False,
+                         fixed_lr=0.05, lambda_init=1.0, t3=2,
+                         kl_clip=kl_clip)
+        opt = optimizers.kfac(mlp, cfg, family="bernoulli")
+        state = opt.init(params, batch)
+        p, norms = params, []
+        for step in range(steps):
+            p, state, metrics = opt.update(
+                None, state, p, batch,
+                jax.random.fold_in(jax.random.PRNGKey(3), step))
+            norms.append(float(metrics["delta_norm"]))
+        return p, norms
+
+    p_off, n_off = run(0.0)
+    p_huge, n_huge = run(1e9)
+    _assert_trees_equal(p_off, p_huge, "huge kl_clip must be a no-op")
+    np.testing.assert_array_equal(n_off, n_huge)
+
+    p_tight, n_tight = run(1e-5)
+    assert all(t < o for t, o in zip(n_tight, n_off))
+    assert not np.allclose(jax.tree.leaves(p_tight)[0],
+                           jax.tree.leaves(p_off)[0])
+
+
 # ---------------------------------------------------------------------------
 # baselines race through the SAME Trainer.fit loop
 # ---------------------------------------------------------------------------
