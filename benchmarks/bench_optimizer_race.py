@@ -28,12 +28,12 @@ def make_problem(n=1024, seed=7):
     return mlp, params, data
 
 
-def race(model, params, data, opt, steps):
+def race(model, params, data, opt, steps, obs=None):
     """One optimizer through the shared trainer loop; returns
     (per-step losses, wall seconds)."""
     from repro.training.trainer import Trainer
     tr = Trainer(model, opt, TrainConfig(steps=steps, seed=0,
-                                         log_every=10_000_000))
+                                         log_every=10_000_000), obs=obs)
     t0 = time.time()
     out = tr.fit(params, data, steps=steps, log=lambda *_: None)
     return [h["loss"] for h in out["history"]], time.time() - t0
@@ -65,6 +65,39 @@ def run_conv_kfac(steps=30, inv_mode="blkdiag"):
     kcfg = KFACConfig(inv_mode=inv_mode, lambda_init=3.0, t3=5, eta=1e-5)
     opt = optimizers.kfac(net, kcfg, family="categorical")
     return race(net, params, data, opt, steps)
+
+
+def run_obs_overhead(steps=30):
+    """The telemetry overhead contract (docs/observability.md): the same
+    blkdiag K-FAC race, fully instrumented (stage spans + per-step events
+    to a JSONL sink) vs disabled.  Each side is warmed first (shared jit
+    cache inside one optimizer) and takes the best of two timed runs, so
+    the ratio measures instrumentation, not compile noise.  Returns
+    (disabled_s, enabled_s, stage-mean dict from the registry)."""
+    import os
+    import tempfile
+
+    from repro.obs import Obs, ObsConfig
+
+    def timed(obs):
+        mlp, params, data = make_problem()
+        cfg = KFACConfig(inv_mode="blkdiag", lambda_init=3.0, t3=5,
+                         eta=1e-5)
+        opt = optimizers.kfac(mlp, cfg, family="bernoulli", obs=obs)
+        race(mlp, params, data, opt, steps, obs=obs)      # warmup/compile
+        return min(race(mlp, params, data, opt, steps, obs=obs)[1]
+                   for _ in range(2))
+
+    off_s = timed(None)
+    path = os.path.join(tempfile.mkdtemp(prefix="repro_obs_"),
+                        "race_obs.jsonl")
+    obs = Obs(ObsConfig(enabled=True, jsonl_path=path))
+    on_s = timed(obs)
+    obs.close()
+    stages = {k: v["mean"]
+              for k, v in obs.registry.snapshot()["histogram"].items()
+              if k.startswith("span_s")}
+    return off_s, on_s, stages
 
 
 def run_sgd(steps=30, lr=0.1, mom=0.9):
@@ -113,6 +146,15 @@ def run(steps=30):
     rows.append(("kfac_conv_classifier", secs / steps * 1e6, kf[-1]))
     kf, secs = run_conv_kfac(steps, "eigen")
     rows.append(("kfac_conv_classifier_eigen", secs / steps * 1e6, kf[-1]))
+    # telemetry overhead: same blkdiag race, obs fully enabled vs disabled.
+    # derived IS the overhead fraction (the row's claim, like the influence
+    # suite's uncertainty row); the contract is < 5% (docs/observability.md)
+    off_s, on_s, stages = run_obs_overhead(steps)
+    rows.append(("obs_overhead", on_s / steps * 1e6, (on_s - off_s) / off_s,
+                 {"disabled_us_per_step": off_s / steps * 1e6,
+                  "enabled_us_per_step": on_s / steps * 1e6,
+                  "overhead_frac": (on_s - off_s) / off_s,
+                  "stage_mean_s": stages}))
     return rows
 
 

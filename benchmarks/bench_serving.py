@@ -23,7 +23,10 @@ Rows (BENCH_serving.json, benchlib schema):
   (``ttft_p50_ms`` / ``ttft_p99_ms`` measure submission -> first token,
   i.e. queueing + prefill; ``decode_p50_ms`` / ``decode_p99_ms`` measure
   the steady-state gap between a request's consecutive tokens — mixing
-  the two in one distribution made p99 track prefill, not decode),
+  the two in one distribution made p99 track prefill, not decode; both
+  definitions live in ``repro.obs.latency.RequestLatencyTracker``, the
+  same class the live engine records into, so bench rows and production
+  metrics cannot diverge),
   ``n_tokens``, ``n_requests``, ``preemptions``, ``batch_slots`` and the
   ``backend`` label (``xla`` einsum fallback, or ``pallas`` /
   ``pallas_interp`` — interpret mode is labelled, never silently timed as
@@ -46,6 +49,7 @@ import numpy as np
 from repro.configs import get_reduced_config
 from repro.kernels import ops
 from repro.models.lm import LM
+from repro.obs import RequestLatencyTracker
 from repro.serving.server import Engine, Request, serial_engine
 
 # (config registry name, row prefix, decode window/cap live in the model)
@@ -91,14 +95,15 @@ def _clone(reqs):
 
 def _drive(engine: Engine, reqs, arrivals):
     """Open-loop serve: submit each request at its arrival time, step until
-    drained.  Returns (ttft [s], decode gaps [s], elapsed [s], n_tokens,
-    preemptions) — a request's *first* emission measures submission ->
-    first token (queueing + prefill, the TTFT distribution); subsequent
+    drained.  Returns (tracker, elapsed [s], n_tokens, preemptions).
+
+    The TTFT / decode-gap split is *not* re-derived here — it comes from
+    :class:`repro.obs.RequestLatencyTracker`, the single definition the
+    live engine telemetry also records against: a request's first emission
+    measures submission -> first token (queueing + prefill); subsequent
     emissions measure the steady-state decode-step gap.  The two are kept
     apart: one mixed distribution makes p99 track prefill, not decode."""
-    ttft, decode = [], []
-    last = {}                      # uid -> wall time of previous emission
-    seen = set()                   # uids that emitted their first token
+    lat = RequestLatencyTracker()
     pending = list(zip(reqs, arrivals))
     t0 = time.time()
     while pending or not engine.idle:
@@ -106,7 +111,7 @@ def _drive(engine: Engine, reqs, arrivals):
         while pending and pending[0][1] <= now:
             req, _ = pending.pop(0)
             if engine.submit(req):
-                last[req.uid] = time.time()
+                lat.on_submit(req.uid)
         if engine.idle:
             if pending:                      # wait out the next arrival
                 time.sleep(max(0.0, min(1e-3, pending[0][1] - now)))
@@ -114,11 +119,9 @@ def _drive(engine: Engine, reqs, arrivals):
         ems = engine.step_once()
         t = time.time()
         for req, _tok in ems:
-            (decode if req.uid in seen else ttft).append(t - last[req.uid])
-            seen.add(req.uid)
-            last[req.uid] = t
+            lat.on_emit(req.uid, t)
     n_pre = sum(r.preemptions for r in reqs)
-    return ttft, decode, time.time() - t0, len(ttft) + len(decode), n_pre
+    return lat, time.time() - t0, lat.n_tokens, n_pre
 
 
 def _bench_engine(engine: Engine, reqs, arrivals):
@@ -132,19 +135,16 @@ def _bench_engine(engine: Engine, reqs, arrivals):
     for _ in range(2):
         engine.reset()
         r = _drive(engine, _clone(reqs), arrivals)
-        if best is None or r[3] / r[2] > best[3] / best[2]:
+        if best is None or r[2] / r[1] > best[2] / best[1]:
             best = r
-    ttft, decode, elapsed, n, n_pre = best
-    ttft_ms = np.asarray(ttft) * 1e3
-    dec_ms = np.asarray(decode) * 1e3
-    all_ms = np.concatenate([ttft_ms, dec_ms])
+    lat, elapsed, n, n_pre = best
+    all_ms = [x * 1e3 for x in lat.ttft_s + lat.decode_s]
     return {
         "us_per_call": float(np.mean(all_ms) * 1e3),
         "derived": n / elapsed,                        # tokens/s
-        "meta": {"ttft_p50_ms": float(np.percentile(ttft_ms, 50)),
-                 "ttft_p99_ms": float(np.percentile(ttft_ms, 99)),
-                 "decode_p50_ms": float(np.percentile(dec_ms, 50)),
-                 "decode_p99_ms": float(np.percentile(dec_ms, 99)),
+        # percentiles come from the tracker — the same definition (and the
+        # same exact-percentile arithmetic) the live engine records
+        "meta": {**lat.percentiles(),
                  "n_tokens": n, "n_requests": len(reqs),
                  "preemptions": n_pre,
                  "batch_slots": engine.b,

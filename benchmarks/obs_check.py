@@ -1,0 +1,60 @@
+"""Validate an obs JSONL event log — the CI gate over instrumented runs.
+
+Usage::
+
+    python -m benchmarks.obs_check /tmp/train.jsonl \
+        --expect train_step,kfac_step,refresh
+
+Every line must parse as a schema-valid event
+(``repro.obs.export.validate_event`` — version tag, finite timestamp,
+the event type's required fields, finite numbers throughout); the
+``--expect`` list additionally requires at least one event of each named
+type to be present.  Exits non-zero (with the offending line number /
+missing type) on any violation — CI uploads the log as an artifact either
+way, so a red run still leaves the evidence behind.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from collections import Counter
+
+from repro.obs.export import read_jsonl
+
+
+def check(path: str, expect=()) -> Counter:
+    """Validate ``path``; returns the per-event-type counts.  Raises
+    ValueError on a malformed line or a missing expected type."""
+    events = read_jsonl(path)
+    if not events:
+        raise ValueError(f"{path}: no events")
+    counts = Counter(e["event"] for e in events)
+    missing = [t for t in expect if counts[t] == 0]
+    if missing:
+        raise ValueError(
+            f"{path}: expected event type(s) never emitted: {missing} "
+            f"(saw {dict(counts)})")
+    return counts
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("path", help="JSONL event log to validate")
+    ap.add_argument("--expect", default="",
+                    help="comma-separated event types that must appear "
+                         "at least once (e.g. train_step,kfac_step)")
+    args = ap.parse_args(argv)
+    expect = [t for t in args.expect.split(",") if t]
+    try:
+        counts = check(args.path, expect)
+    except (OSError, ValueError) as e:
+        print(f"[obs_check] FAIL: {e}", file=sys.stderr)
+        return 1
+    total = sum(counts.values())
+    detail = " ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+    print(f"[obs_check] ok: {total} events ({detail})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,6 +10,8 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Tuple
 
+from repro.obs.config import ObsConfig
+
 
 @dataclass(frozen=True)
 class ModelConfig:
@@ -191,6 +193,12 @@ class KFACConfig:
                                       # soon as is_ready — wall-clock stops
                                       # affecting the trajectory (golden runs)
     damping_floor: float = 1e-8
+    obs: ObsConfig = field(default_factory=ObsConfig)
+                                      # telemetry for the optimizer pipeline
+                                      # (per-stage spans, refresh events;
+                                      # repro.obs / docs/observability.md).
+                                      # disabled = bitwise the
+                                      # uninstrumented program
 
     def replace(self, **kw) -> "KFACConfig":
         return dataclasses.replace(self, **kw)
@@ -234,6 +242,10 @@ class TrainConfig:
     curvature_every: int = 0          # export a curvature bundle at steps
                                       # divisible by this AND by
                                       # checkpoint_every (0 = never)
+    obs: ObsConfig = field(default_factory=ObsConfig)
+                                      # telemetry for the training loop
+                                      # (per-step events, rejected-step
+                                      # counters; repro.obs)
 
 
 @dataclass(frozen=True)

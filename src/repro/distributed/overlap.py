@@ -21,9 +21,21 @@ The controller is host-level state owned by the ``KFACPipeline`` (the
 stage composition is host-driven by design); the swap itself is a pure
 ``state.replace``, checkpointable mid-flight (an in-flight dispatch is
 simply lost on restore and re-issued at the next due step).
+
+Telemetry: the controller's lifecycle state is **public** —
+``n_commits`` / ``n_forced_commits`` / ``n_cancelled`` /
+``cancelled_age_steps`` counters and ``last_staleness`` — and mirrors
+into an :class:`repro.obs.Obs` registry when one is attached
+(``overlap/commits``, ``overlap/forced_commits``,
+``overlap/cancelled_buffers``, ``overlap/staleness_steps`` gauge, and
+the ``overlap/refresh_s`` / ``overlap/cancelled_buffer_s`` wall-time
+histograms).  A cancelled in-flight buffer's timing is *counted*, not
+discarded: the dispatch-to-cancel wall time and its age in steps are
+recorded before the buffer is dropped.
 """
 from __future__ import annotations
 
+import time
 from typing import Optional, Tuple
 
 import jax
@@ -48,26 +60,68 @@ class OverlapController:
     the golden overlap envelope is pinned in this mode.
     """
 
-    def __init__(self, refresh_fn, bound: int, deterministic: bool = False):
+    def __init__(self, refresh_fn, bound: int, deterministic: bool = False,
+                 obs=None):
+        from repro import obs as obs_mod
         self.refresh_fn = refresh_fn
         self.bound = max(1, int(bound))
         self.deterministic = deterministic
-        self.pending: Optional[Tuple[int, object]] = None
+        # (dispatch step, dispatch wall time, in-flight inverse buffer)
+        self.pending: Optional[Tuple[int, float, object]] = None
+        # public lifecycle counters (mirrored into the obs registry)
+        self.n_commits = 0
+        self.n_forced_commits = 0
+        self.n_cancelled = 0
+        self.cancelled_age_steps = 0
+        self.last_staleness = 0
+        self.last_refresh_s = 0.0     # dispatch->commit wall of last commit
+        self.last_forced = False      # last commit had to block (not ready)
+        self.obs = obs_mod.from_config(obs)
+        self._c_commits = self.obs.counter("overlap/commits")
+        self._c_forced = self.obs.counter("overlap/forced_commits")
+        self._c_cancelled = self.obs.counter("overlap/cancelled_buffers")
+        self._g_staleness = self.obs.gauge("overlap/staleness_steps")
+        self._h_refresh = self.obs.histogram("overlap/refresh_s")
+        self._h_cancelled = self.obs.histogram("overlap/cancelled_buffer_s")
 
     # ------------------------------------------------------------------
     def reset(self):
         """New run (``opt.init``): drop any in-flight buffer."""
         self.pending = None
+        self._set_staleness(0)
 
-    def cancel(self):
+    def cancel(self, step: Optional[int] = None):
         """A synchronous recompute (T2 gamma sweep) superseded the
         in-flight refresh — committing it later would roll inverses
-        *back*, so drop it."""
+        *back*, so drop it.  The abandoned buffer's timing is counted
+        (wall time in flight + age in steps), not silently discarded."""
+        if self.pending is not None:
+            dispatched, t0, _ = self.pending
+            self.n_cancelled += 1
+            self._c_cancelled.inc()
+            self._h_cancelled.observe(time.perf_counter() - t0)
+            if step is not None:
+                self.cancelled_age_steps += max(0, step - dispatched)
         self.pending = None
+        self._set_staleness(0)
 
     # ------------------------------------------------------------------
-    def _commit(self, state, inv):
+    def _set_staleness(self, steps: int):
+        self.last_staleness = int(steps)
+        self._g_staleness.set(steps)
+
+    def _commit(self, state, inv, *, forced: bool = False):
+        _, t0, _ = self.pending
         self.pending = None
+        self.n_commits += 1
+        self._c_commits.inc()
+        self.last_forced = forced
+        if forced:
+            self.n_forced_commits += 1
+            self._c_forced.inc()
+        self.last_refresh_s = time.perf_counter() - t0
+        self._h_refresh.observe(self.last_refresh_s)
+        self._set_staleness(0)
         return state.replace(inv=inv, inv_pending=inv,
                              staleness=jnp.int32(0))
 
@@ -77,7 +131,7 @@ class OverlapController:
         deterministic mode — swaps happen on the schedule alone."""
         if self.pending is None or self.deterministic:
             return state
-        _, inv = self.pending
+        _, _, inv = self.pending
         if _all_ready(inv):
             return self._commit(state, inv)
         return state
@@ -91,16 +145,18 @@ class OverlapController:
         factors (hot-started from the just-committed inverses).
         """
         if self.pending is not None:
-            dispatched, inv = self.pending
+            dispatched, _, inv = self.pending
             age = step - dispatched
             ready = (not self.deterministic) and _all_ready(inv)
             if due or age >= self.bound or ready:
                 jax.block_until_ready(inv)
-                state = self._commit(state, inv)
+                state = self._commit(state, inv, forced=not ready)
             else:
+                self._set_staleness(age)
                 state = state.replace(staleness=jnp.int32(age))
         if due and self.pending is None:
             inv = self.refresh_fn(state.factors, state.gamma, state.inv)
-            self.pending = (step, inv)
+            self.pending = (step, time.perf_counter(), inv)
+            self._set_staleness(0)
             state = state.replace(staleness=jnp.int32(0))
         return state

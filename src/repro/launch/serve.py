@@ -20,8 +20,10 @@ import argparse
 
 import jax
 
+from repro import obs as obs_mod
 from repro.configs import get_config, get_reduced_config
 from repro.models.lm import LM
+from repro.obs import ObsConfig
 from repro.serving.server import DECODE_ROUTES, Engine, Request
 
 
@@ -50,7 +52,16 @@ def main(argv=None):
     ap.add_argument("--bundle", default=None,
                     help="curvature bundle path (with --uncertainty); "
                          "omit for an identity smoke-test bundle")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable telemetry: queue/slot/page gauges, "
+                         "TTFT & decode-gap histograms, JSONL events "
+                         "(docs/observability.md)")
+    ap.add_argument("--obs_jsonl", default="",
+                    help="JSONL event log path (implies --obs)")
     args = ap.parse_args(argv)
+
+    obs = obs_mod.Obs(ObsConfig(enabled=args.obs or bool(args.obs_jsonl),
+                                jsonl_path=args.obs_jsonl))
 
     cfg = (get_reduced_config(args.arch) if args.reduced
            else get_config(args.arch))
@@ -59,7 +70,7 @@ def main(argv=None):
     laplace = _build_laplace(lm, args) if args.uncertainty else None
     eng = Engine(lm, params, batch_slots=args.slots, max_len=args.max_len,
                  page_size=args.page_size, num_pages=args.num_pages,
-                 decode_route=args.decode_route, laplace=laplace)
+                 decode_route=args.decode_route, laplace=laplace, obs=obs)
     reqs = [Request(uid=i, prompt=[(7 * i + j) % cfg.vocab_size
                                    for j in range(4 + i % 3)],
                     max_new=args.max_new, temperature=args.temperature,
@@ -78,11 +89,17 @@ def main(argv=None):
     print(f"[serve] {rep.steps} steps ({args.decode_route} route): "
           f"{len(rep.completed)} completed, "
           f"{len(rep.unfinished)} in flight, {len(rep.unserved)} queued, "
-          f"{len(rep.failed)} rejected; {rep.preemptions} preemptions, "
-          f"{eng.alloc.n_evicted} pages evicted")
+          f"{len(rep.failed)} rejected")
+    # the stats line renders from the obs registry — the engine's always-
+    # live counters — through the one shared formatting path
+    print(obs.summary(title="serve"))
+    if obs.enabled and rep.ttft_p50_ms is not None:
+        print(f"[serve] ttft p50={rep.ttft_p50_ms:.2f}ms "
+              f"p99={rep.ttft_p99_ms:.2f}ms")
     if args.uncertainty and rep.mean_token_variance is not None:
         print(f"[serve] mean per-token Laplace variance: "
               f"{rep.mean_token_variance:.4g}")
+    obs.close()
     return rep
 
 

@@ -18,9 +18,10 @@ import argparse
 
 import jax
 
+from repro import obs as obs_mod
 from repro import optimizers
 from repro.configs import get_config, get_reduced_config
-from repro.configs.base import KFACConfig, TrainConfig
+from repro.configs.base import KFACConfig, ObsConfig, TrainConfig
 from repro.data.pipeline import (SyntheticLMData, make_audio_batch,
                                  make_vlm_batch)
 from repro.launch.mesh import make_local_mesh, make_production_mesh
@@ -73,6 +74,14 @@ def main(argv=None):
                          "mesh, or asynchronously double-buffered "
                          "(repro.distributed; docs/distributed.md)")
     ap.add_argument("--tau1", type=float, default=1.0)
+    ap.add_argument("--obs", action="store_true",
+                    help="enable telemetry: per-step/stage timings, "
+                         "refresh events, end-of-run snapshot "
+                         "(docs/observability.md)")
+    ap.add_argument("--obs_jsonl", default="",
+                    help="JSONL event log path (implies --obs)")
+    ap.add_argument("--obs_console_every", type=int, default=0,
+                    help="print the telemetry snapshot every N steps")
     args = ap.parse_args(argv)
 
     cfg = (get_reduced_config(args.arch) if args.reduced
@@ -83,13 +92,24 @@ def main(argv=None):
     if callable(mesh):
         mesh = mesh()
 
+    # one shared Obs across the optimizer pipeline and the trainer: the
+    # kfac_step / refresh events and the train_step events land in one
+    # registry and one JSONL log
+    ocfg = ObsConfig(enabled=args.obs or bool(args.obs_jsonl),
+                     jsonl_path=args.obs_jsonl,
+                     console_every=args.obs_console_every)
+    obs = obs_mod.Obs(ocfg)
+
     kcfg = KFACConfig(lambda_init=args.lambda_init, inv_mode=args.inv_mode,
-                      refresh_mode=args.refresh_mode, tau1=args.tau1, t3=5)
+                      refresh_mode=args.refresh_mode, tau1=args.tau1, t3=5,
+                      obs=ocfg)
     tcfg = TrainConfig(steps=args.steps,
                        checkpoint_dir=args.ckpt_dir or "/tmp/repro_ckpt",
-                       checkpoint_every=max(10, args.steps // 2))
+                       checkpoint_every=max(10, args.steps // 2),
+                       obs=ocfg)
     lm = LM(cfg, kcfg, mesh)
-    opt = (optimizers.kfac(lm, kcfg, mesh) if args.optimizer == "kfac"
+    opt = (optimizers.kfac(lm, kcfg, mesh, obs=obs)
+           if args.optimizer == "kfac"
            else optimizers.get(args.optimizer, lm, lr=args.lr))
     params = lm.init_params(jax.random.PRNGKey(0))
     print(f"[train] arch={cfg.name} params={lm.n_params():,} "
@@ -98,11 +118,16 @@ def main(argv=None):
     data = _ArchData(cfg, SyntheticLMData(cfg.vocab_size, args.seq,
                                           args.global_batch, mesh))
     ckpt = Checkpointer(tcfg.checkpoint_dir) if args.ckpt_dir else None
-    trainer = Trainer(lm, opt, tcfg, mesh, ckpt)
+    trainer = Trainer(lm, opt, tcfg, mesh, ckpt, obs=obs)
     result = trainer.fit(params, data, args.steps)
     hist = result["history"]
     print(f"[train] done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}"
           f" in {result['seconds']:.1f}s")
+    if obs.enabled:
+        # the end-of-run stats line IS the obs snapshot — one formatting
+        # path (repro.obs.export.console_summary) for every launcher
+        print(obs.summary(title="train"))
+        obs.close()
     return result
 
 

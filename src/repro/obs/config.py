@@ -1,0 +1,39 @@
+"""ObsConfig: the one switch every plane's telemetry rides behind.
+
+Kept dependency-free (no jax, no registry imports) so
+``repro.configs.base`` can embed it in the frozen ``TrainConfig`` /
+``KFACConfig`` dataclasses without import cycles.
+
+The contract (docs/observability.md):
+
+* ``enabled=False`` (the default) must be bitwise-identical to an
+  uninstrumented program — same jitted functions, no extra host syncs,
+  no timing syscalls on the hot path.  Counters still count (they are
+  plain host integers and feed ``RunReport``-style summaries), but spans
+  are no-op context managers and no sink I/O happens.
+* ``enabled=True`` buys wall-clock spans (device work timed host-side
+  after ``block_until_ready`` at span close — never via callbacks inside
+  jit), the JSONL event sink, and the periodic console summary, at a
+  measured few-percent overhead (the ``obs_overhead`` row in
+  ``BENCH_optimizer.json``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ObsConfig:
+    enabled: bool = False
+    jsonl_path: str = ""            # append-only event sink ("" = none)
+    console_every: int = 0          # steps between console summaries (0 = off)
+    trace_annotations: bool = False  # wrap spans in jax.profiler
+                                     # TraceAnnotation so they show up in
+                                     # TensorBoard / perfetto profiles
+    reservoir: int = 2048           # histogram sample bound: percentiles are
+                                     # exact over the most recent this-many
+                                     # observations
+
+    def replace(self, **kw) -> "ObsConfig":
+        return dataclasses.replace(self, **kw)

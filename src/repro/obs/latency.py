@@ -1,0 +1,103 @@
+"""Shared request-latency definitions: TTFT vs decode-gap.
+
+There is exactly one definition of the serving latency split, used by
+*both* the live engine telemetry and ``benchmarks/bench_serving.py`` —
+so the bench rows and the live metrics can never diverge:
+
+* **TTFT** — a request's *first* emission measures submission -> first
+  token, i.e. queueing + prefill;
+* **decode gap** — every subsequent emission measures the wall-clock gap
+  since the request's previous emission (steady-state decode-step
+  latency).
+
+A preempted request keeps its TTFT (it already emitted once); its replay
+emissions keep counting as decode gaps — preemption pressure shows up in
+the decode tail, exactly as the bench always measured it.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.obs.metrics import Registry, percentile
+
+
+class RequestLatencyTracker:
+    """Per-request submission/emission clocking.
+
+    Host-side only; optionally mirrors observations into ``registry``
+    histograms ``serve/ttft_ms`` and ``serve/decode_gap_ms``."""
+
+    def __init__(self, registry: Optional[Registry] = None):
+        self._reg = registry
+        self._h_ttft = (registry.histogram("serve/ttft_ms")
+                        if registry else None)
+        self._h_dec = (registry.histogram("serve/decode_gap_ms")
+                       if registry else None)
+        self.reset()
+
+    def reset(self) -> None:
+        self._last: Dict[int, float] = {}   # uid -> previous emission time
+        self.ttft: Dict[int, float] = {}    # uid -> seconds
+        self.decode: Dict[int, List[float]] = {}
+
+    # ------------------------------------------------------------------
+    def on_submit(self, uid: int, t: Optional[float] = None) -> None:
+        self._last[uid] = time.time() if t is None else t
+
+    def on_emit(self, uid: int, t: Optional[float] = None
+                ) -> Tuple[str, float]:
+        """Record one token emission; returns ("ttft"|"decode", gap_s)."""
+        t = time.time() if t is None else t
+        prev = self._last.get(uid)
+        if prev is None:
+            raise ValueError(f"emission for uid={uid} before on_submit")
+        gap = t - prev
+        self._last[uid] = t
+        if uid not in self.ttft:
+            self.ttft[uid] = gap
+            if self._h_ttft is not None:
+                self._h_ttft.observe(gap * 1e3)
+            return "ttft", gap
+        self.decode.setdefault(uid, []).append(gap)
+        if self._h_dec is not None:
+            self._h_dec.observe(gap * 1e3)
+        return "decode", gap
+
+    # ------------------------------------------------------------------
+    @property
+    def ttft_s(self) -> List[float]:
+        return list(self.ttft.values())
+
+    @property
+    def decode_s(self) -> List[float]:
+        return [g for gaps in self.decode.values() for g in gaps]
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.ttft) + len(self.decode_s)
+
+    def percentiles(self) -> dict:
+        """The four serving-row fields of the BENCH_serving.json schema
+        (ms); NaN-free — raises if either distribution is empty."""
+        ttft_ms = [x * 1e3 for x in self.ttft_s]
+        dec_ms = [x * 1e3 for x in self.decode_s]
+        return {
+            "ttft_p50_ms": percentile(ttft_ms, 50),
+            "ttft_p99_ms": percentile(ttft_ms, 99),
+            "decode_p50_ms": percentile(dec_ms, 50),
+            "decode_p99_ms": percentile(dec_ms, 99),
+        }
+
+    def percentiles_or_none(self) -> dict:
+        """Lenient variant for live reports: a missing distribution (no
+        requests, or single-token outputs with no decode gaps) yields
+        ``None`` entries instead of raising."""
+        ttft_ms = [x * 1e3 for x in self.ttft_s]
+        dec_ms = [x * 1e3 for x in self.decode_s]
+        return {
+            "ttft_p50_ms": percentile(ttft_ms, 50) if ttft_ms else None,
+            "ttft_p99_ms": percentile(ttft_ms, 99) if ttft_ms else None,
+            "decode_p50_ms": percentile(dec_ms, 50) if dec_ms else None,
+            "decode_p99_ms": percentile(dec_ms, 99) if dec_ms else None,
+        }

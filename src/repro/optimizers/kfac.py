@@ -620,6 +620,11 @@ class KFACEngine:
             "grad_norm": jnp.sqrt(T.tree_sqnorm(grads_reg)),
             "delta_norm": delta_norm,
         }
+        if cfg.kl_clip > 0 or cfg.clip_delta_norm > 0:
+            # the applied clip factor nu (1.0 = no clipping bit).  Only
+            # added when a clip is configured so the default jitted
+            # program's output structure is unchanged.
+            metrics["nu"] = factor
         return new_params, state, metrics
 
     # ------------------------------------------------------------------
@@ -669,9 +674,16 @@ class KFACPipeline:
     hand, which ``tests/test_transform.py`` pins per ``inv_mode``.
     """
 
-    def __init__(self, engine: KFACEngine):
+    def __init__(self, engine: KFACEngine, obs=None):
+        from repro import obs as obs_mod
         self.engine = eng = engine
         cfg = eng.cfg
+        # telemetry (repro.obs): obs=None reads the engine's cfg.obs; pass
+        # a shared Obs to land pipeline events in the same log as the
+        # trainer's.  Disabled, the spans below are no-op context managers
+        # (no clocks, no block_until_ready) and the jitted stages are
+        # byte-identical — pinned by tests/test_obs.py.
+        self.obs = obs_mod.from_config(obs if obs is not None else cfg.obs)
         self._start: Optional[int] = None
         self._stats = jax.jit(eng.stats_grads)
         self._grads_only = jax.jit(eng.grads_only)
@@ -692,7 +704,7 @@ class KFACPipeline:
             if eng.refresh_mode == "overlap":
                 self._overlap = OverlapController(
                     self._refresh_sharded, bound=max(1, cfg.t3),
-                    deterministic=cfg.overlap_deterministic)
+                    deterministic=cfg.overlap_deterministic, obs=self.obs)
         self._multi = jax.jit(eng.refresh_multi)
         if cfg.use_rescale:
             self._update = jax.jit(
@@ -749,34 +761,66 @@ class KFACPipeline:
     def _full_refresh(self, state: KFACState) -> KFACState:
         """Synchronous full refresh via the mode's executor: the serial
         engine stage, or the block-parallel sharded service."""
-        if self._refresh_sharded is not None:
-            inv = self._refresh_sharded(state.factors, state.gamma,
-                                        state.inv)
-            return state.replace(inv=inv)
-        return self._refresh(state)
+        sharded = self._refresh_sharded is not None
+        mode = "sharded" if sharded else "serial"
+        with self.obs.span(f"refresh/{mode}",
+                           block=lambda: out.inv) as sp:
+            if sharded:
+                inv = self._refresh_sharded(state.factors, state.gamma,
+                                            state.inv)
+                out = state.replace(inv=inv)
+            else:
+                out = self._refresh(state)
+        if self.obs.enabled:
+            payload = {"mode": mode, "wall_s": sp.seconds}
+            plan = getattr(self._refresh_sharded, "plan", None)
+            if plan is not None:
+                payload.update(n_shards=plan.n_shards,
+                               serial_cost=float(plan.serial_cost()),
+                               parallel_cost=float(plan.parallel_cost()))
+            self.obs.emit("refresh", **payload)
+        return out
 
     def _stage_refresh(self, ctx: StepContext):
         cfg = self.engine.cfg
         if cfg.t2 > 0 and ctx.step > 0 and ctx.step % cfg.t2 == 0:
             # gamma sweep (S6.6): stacked candidate inverses; selection
             # happens inside the quadratic-model stage
-            ctx.candidates = self._multi(ctx.state)
+            with self.obs.span("refresh/gamma_sweep",
+                               block=lambda: ctx.candidates):
+                ctx.candidates = self._multi(ctx.state)
             if self._overlap is not None:
                 # the sweep recomputes inverses synchronously from the
                 # current factors — an older in-flight buffer must not
                 # overwrite them later
-                self._overlap.cancel()
+                self._overlap.cancel(ctx.step)
                 ctx.state = ctx.state.replace(staleness=jnp.int32(0))
         elif self._overlap is not None and not ctx.warmup:
-            ctx.state = self._overlap.on_refresh_stage(
+            ctl = self._overlap
+            commits0 = ctl.n_commits
+            ctx.state = ctl.on_refresh_stage(
                 ctx.state, ctx.step, due=(ctx.step % cfg.t3 == 0))
             ctx.metrics["staleness"] = ctx.state.staleness
+            if self.obs.enabled and ctl.n_commits > commits0:
+                # an async buffer just swapped in: the dispatch->commit
+                # wall (+ whether the commit had to block) is the refresh
+                self.obs.emit("refresh", mode="overlap",
+                              wall_s=ctl.last_refresh_s,
+                              forced=ctl.last_forced,
+                              staleness=int(ctx.state.staleness),
+                              n_cancelled=ctl.n_cancelled)
         elif ctx.warmup:
             ctx.state = self._full_refresh(ctx.state)
         elif self._refresh_sub is not None:
             # staggered: 1/T3 of the layer inverses per step, groups
             # balanced by the d³ cost model
-            ctx.state = self._refresh_sub[ctx.step % cfg.t3](ctx.state)
+            group = ctx.step % cfg.t3
+            with self.obs.span("refresh/staggered",
+                               block=lambda: ctx.state.inv) as sp:
+                ctx.state = self._refresh_sub[group](ctx.state)
+            if self.obs.enabled:
+                self.obs.emit("refresh", mode="staggered",
+                              wall_s=sp.seconds, group=group)
         elif ctx.step % cfg.t3 == 0:
             ctx.state = self._full_refresh(ctx.state)
 
@@ -829,8 +873,21 @@ class KFACPipeline:
         ctx = StepContext(step=step, warmup=step - self._start < 3,
                           state=state, params=params, batch=batch, rng=rng,
                           grads=grads)
+        if not self.obs.enabled:
+            for stage in self.stages:
+                stage.run(ctx)
+            return ctx.new_params, ctx.state, ctx.metrics
+        # instrumented path: per-stage wall time (host-side, blocking on
+        # the stage's outputs at span close — the jitted programs are the
+        # same; only the host gains sync points) + one kfac_step event
+        stage_s = {}
         for stage in self.stages:
-            stage.run(ctx)
+            blk = lambda: [x for x in (ctx.state, ctx.grads,
+                                       ctx.new_params) if x is not None]
+            with self.obs.span(f"kfac/{stage.name}", block=blk) as sp:
+                stage.run(ctx)
+            stage_s[stage.name] = sp.seconds
+        self.obs.emit("kfac_step", step=step, stages=stage_s)
         return ctx.new_params, ctx.state, ctx.metrics
 
     def reject(self, state: KFACState) -> KFACState:
@@ -841,7 +898,7 @@ class KFACPipeline:
 
 def kfac(model=None, cfg: Optional[KFACConfig] = None, mesh=None,
          family: str = "categorical", *,
-         engine: Optional[KFACEngine] = None) -> Optimizer:
+         engine: Optional[KFACEngine] = None, obs=None) -> Optimizer:
     """Build the K-FAC optimizer pipeline as an ``Optimizer``.
 
         opt = kfac(model, KFACConfig(...))
@@ -850,11 +907,14 @@ def kfac(model=None, cfg: Optional[KFACConfig] = None, mesh=None,
                                                 batch, rng)
 
     Pass ``engine=`` to wrap an already-constructed :class:`KFACEngine`
-    (the legacy ``repro.core.kfac.KFAC`` class is the same object)."""
+    (the legacy ``repro.core.kfac.KFAC`` class is the same object); pass
+    ``obs=`` (an ``repro.obs.Obs`` or ``ObsConfig``) to share one
+    telemetry registry/log with the trainer — defaults to the engine's
+    ``cfg.obs``."""
     eng = engine if engine is not None else KFACEngine(model, cfg or
                                                        KFACConfig(),
                                                        mesh, family)
-    pipe = KFACPipeline(eng)
+    pipe = KFACPipeline(eng, obs=obs)
     return Optimizer(init=pipe.init, update=pipe.update, reject=pipe.reject,
                      state_shardings=eng.state_shardings,
                      poll=pipe.poll if eng.refresh_mode == "overlap" else None,

@@ -82,13 +82,23 @@ class RunReport:
     """What ``Engine.run`` actually did.  ``unfinished`` (in-flight) and
     ``unserved`` (never admitted) are non-empty only when ``max_steps``
     cut the run short — they are reported, not dropped.  ``preemptions``
-    counts eviction events across the served requests."""
+    and ``evictions`` are per-run deltas of the engine's obs counters
+    (``serve/preemptions`` / ``serve/evicted_pages``) — the registry is
+    the source of truth, not hand-carried per-request tallies."""
     steps: int = 0
     completed: List[Request] = field(default_factory=list)
     unfinished: List[Request] = field(default_factory=list)
     unserved: List[Request] = field(default_factory=list)
     failed: List[Request] = field(default_factory=list)
     preemptions: int = 0
+    evictions: int = 0                # pages evicted under pressure
+    # per-run latency split (ms) from the shared TTFT / decode-gap
+    # definitions (repro.obs.latency); None when obs is disabled or the
+    # distribution is empty
+    ttft_p50_ms: float = None
+    ttft_p99_ms: float = None
+    decode_p50_ms: float = None
+    decode_p99_ms: float = None
     # mean per-token Laplace predictive variance across all served
     # uncertainty=True tokens; None when no uncertainty was requested
     mean_token_variance: float = None
@@ -107,10 +117,27 @@ class Engine:
     def __init__(self, model, params, *, batch_slots: int, max_len: int,
                  page_size: int = 8, num_pages: int = None,
                  rng_seed: int = 0, decode_route: str = "paged",
-                 laplace=None):
+                 laplace=None, obs=None):
+        from repro import obs as obs_mod
         if decode_route not in DECODE_ROUTES:
             raise ValueError(f"decode_route={decode_route!r} not in "
                              f"{DECODE_ROUTES}")
+        # telemetry (repro.obs): counters are always live (plain host ints
+        # — they feed RunReport's aggregates); per-step gauges, the TTFT /
+        # decode-gap tracker and JSONL events exist only when enabled, so
+        # the disabled engine runs the identical compiled step functions
+        # with no extra per-token work (pinned by tests/test_obs.py)
+        self.obs = obs_mod.from_config(obs)
+        self._c_steps = self.obs.counter("serve/steps")
+        self._c_completed = self.obs.counter("serve/completed")
+        self._c_rejected = self.obs.counter("serve/rejected")
+        self._c_preempt = self.obs.counter("serve/preemptions")
+        self._c_evicted = self.obs.counter("serve/evicted_pages")
+        self._c_sample = {m: self.obs.counter("serve/sampled",
+                                              {"mode": m})
+                          for m in ("greedy", "seeded", "shared_rng")}
+        self.lat = (obs_mod.RequestLatencyTracker(self.obs.registry)
+                    if self.obs.enabled else None)
         self.model = model
         self.params = params
         self.b = batch_slots
@@ -163,6 +190,8 @@ class Engine:
         self._seq = 0
         self.n_preemptions = 0
         self._failed = []
+        if self.lat is not None:
+            self.lat.reset()
 
     # ------------------------------------------------------------------
     def _decode_paged(self, params, pools, page_table, pos, toks):
@@ -204,11 +233,14 @@ class Engine:
         (batch-composition independent, replay-identical after preemption);
         an unseeded stochastic request keeps the legacy engine-shared RNG."""
         if req.temperature <= 0:
+            self._c_sample["greedy"].inc()
             return int(np.argmax(logits_row))
         if req.seed is None:
+            self._c_sample["shared_rng"].inc()
             self.rng, k = jax.random.split(self.rng)
             return int(jax.random.categorical(
                 k, jnp.asarray(logits_row) / req.temperature))
+        self._c_sample["seeded"].inc()
         return sampling.sample_token(
             logits_row, temperature=req.temperature, top_k=req.top_k,
             top_p=req.top_p, seed=req.seed, index=len(req.out))
@@ -236,11 +268,23 @@ class Engine:
                 req, "page reservation exceeds total cache capacity")
         else:
             self.sched.submit(req)
+            if self.lat is not None:
+                self.lat.on_submit(req.uid)
             return True
+        self._c_rejected.inc()
         self._failed.append(req)
         return False
 
     def _finish(self, slot: int) -> None:
+        req = self.sched.slots[slot]
+        self._c_completed.inc()
+        if self.obs.enabled and req is not None:
+            ttft = (self.lat.ttft.get(req.uid) if self.lat is not None
+                    else None)
+            self.obs.emit("serve_request", uid=req.uid,
+                          n_tokens=len(req.out),
+                          preemptions=req.preemptions,
+                          ttft_ms=(None if ttft is None else ttft * 1e3))
         self.sched.release(slot, done=True)
         self.alloc.free(self.slot_pages[slot])
         self.slot_pages[slot] = []
@@ -260,6 +304,8 @@ class Engine:
         to the queue front (FIFO-preserving), emitted tokens discarded —
         the re-run recomputes the identical stream from scratch."""
         self.sched.preempt(slot)
+        self._c_preempt.inc()
+        self._c_evicted.inc(len(self.slot_pages[slot]))
         self.alloc.evict(self.slot_pages[slot])
         self.slot_pages[slot] = []
         self.page_table[slot] = 0
@@ -342,6 +388,8 @@ class Engine:
                 if want_unc and req.uncertainty:
                     req.var.append(float(var[row, tok]))
                 self.last_tok[slot, 0] = tok
+                if self.lat is not None:
+                    self.lat.on_emit(req.uid)
                 ems.append((req, tok))
                 self._maybe_finish(slot)
         return ems
@@ -354,7 +402,7 @@ class Engine:
         self._grow()
         active = self.sched.active
         if not active:
-            return ems
+            return self._post_step(ems)
         args = (self.params, self.pools, jnp.asarray(self.page_table),
                 jnp.asarray(self.pos), jnp.asarray(self.last_tok))
         want_unc = self.laplace is not None and any(
@@ -374,8 +422,21 @@ class Engine:
             if want_unc and req.uncertainty:
                 req.var.append(float(var[s, tok]))
             self.last_tok[s, 0] = tok
+            if self.lat is not None:
+                self.lat.on_emit(req.uid)
             ems.append((req, tok))
             self._maybe_finish(s)
+        return self._post_step(ems)
+
+    def _post_step(self, ems):
+        """Per-step bookkeeping: the step counter always; occupancy gauges
+        only when enabled (they are point-in-time, not aggregates)."""
+        self._c_steps.inc()
+        if self.obs.enabled:
+            self.obs.gauge("serve/queue_depth").set(len(self.sched.queue))
+            self.obs.gauge("serve/active_slots").set(self.sched.n_active)
+            self.obs.gauge("serve/pages_in_use").set(
+                self.alloc.capacity - self.alloc.n_free)
         return ems
 
     @property
@@ -388,6 +449,11 @@ class Engine:
         """Serve ``requests`` to completion (or ``max_steps``).  The report
         lists completed, in-flight-unfinished, never-admitted and rejected
         requests — nothing is silently dropped."""
+        # counter values at run start: the report's aggregates are per-run
+        # deltas, so warmup runs on a shared engine don't pollute them
+        p0, e0 = self._c_preempt.value, self._c_evicted.value
+        if self.lat is not None:
+            self.lat.reset()          # per-run latency distributions
         for r in requests:
             self.submit(r)
         steps = 0
@@ -397,15 +463,27 @@ class Engine:
             self.step_once()
             steps += 1
         token_vars = [v for r in requests for v in r.var]
+        lat_pcts = {}
+        if self.lat is not None:
+            lat_pcts = {k: v
+                        for k, v in self.lat.percentiles_or_none().items()
+                        if v is not None}
         report = RunReport(
             steps=steps,
             completed=[r for r in requests if r.done],
             unfinished=[self.sched.slots[s] for s in self.sched.active],
             unserved=self.sched.queued,
             failed=list(self._failed),
-            preemptions=sum(r.preemptions for r in requests),
+            preemptions=int(self._c_preempt.value - p0),
+            evictions=int(self._c_evicted.value - e0),
             mean_token_variance=(float(np.mean(token_vars))
-                                 if token_vars else None))
+                                 if token_vars else None),
+            **lat_pcts)
+        if self.obs.enabled:
+            self.obs.emit("serve_run", steps=steps,
+                          completed=len(report.completed),
+                          preemptions=report.preemptions,
+                          evictions=report.evictions, **lat_pcts)
         if report.truncated:
             print(f"[serve] max_steps={max_steps} hit: "
                   f"{len(report.unfinished)} in flight, "
@@ -416,10 +494,10 @@ class Engine:
 
 def serial_engine(model, params, *, max_len: int, page_size: int = 8,
                   rng_seed: int = 0, decode_route: str = "paged",
-                  laplace=None) -> Engine:
+                  laplace=None, obs=None) -> Engine:
     """The slot-serial reference: one slot, so requests are served strictly
     one at a time through the *identical* compute path.  Under greedy
     decoding the batched engine must match this token-for-token."""
     return Engine(model, params, batch_slots=1, max_len=max_len,
                   page_size=page_size, rng_seed=rng_seed,
-                  decode_route=decode_route, laplace=laplace)
+                  decode_route=decode_route, laplace=laplace, obs=obs)

@@ -36,12 +36,21 @@ from repro.utils import tree as T
 
 class Trainer:
     def __init__(self, model, opt, train_cfg: TrainConfig, mesh=None,
-                 checkpointer: Optional[Checkpointer] = None):
+                 checkpointer: Optional[Checkpointer] = None, obs=None):
+        from repro import obs as obs_mod
         self.model = model
         self.opt = as_optimizer(opt)
         self.tc = train_cfg
         self.mesh = mesh
         self.ckpt = checkpointer
+        # telemetry (repro.obs): obs=None reads train_cfg.obs; launchers
+        # pass the same Obs they handed the optimizer so train_step and
+        # kfac_step events land in one log.  Counters stay live even when
+        # disabled (cheap host ints); timing/events only when enabled.
+        self.obs = obs_mod.from_config(obs if obs is not None
+                                       else train_cfg.obs)
+        self._c_rejected = self.obs.counter("train/rejected_steps")
+        self._c_steps = self.obs.counter("train/steps")
         self._preempted = False
         self._bundle_writer = None
         self._install_handlers()
@@ -72,21 +81,30 @@ class Trainer:
 
         history = []
         t_start = time.time()
+        fused = bool(getattr(getattr(self.opt, "engine", None),
+                             "fused", False))
         for step in range(start_step, steps):
             batch = data.batch(step)
             rng = jax.random.fold_in(jax.random.PRNGKey(self.tc.seed), step)
 
-            new_params, state, metrics = self.opt.update(
-                None, state, params, batch, rng)
+            # per-step wall time: host-side span blocking on the produced
+            # params at close (enabled only — disabled is the shared no-op
+            # span: no clock reads, no extra sync, same jitted programs)
+            with self.obs.span("train/step",
+                               block=lambda: new_params) as span:
+                new_params, state, metrics = self.opt.update(
+                    None, state, params, batch, rng)
 
             # non-finite guard: skip poisoned updates, let the optimizer
             # react (K-FAC: 4x damping + momentum reset)
             finite = bool(T.tree_isfinite(new_params)) and np.isfinite(
                 float(metrics.get("delta_norm", 0.0)))
+            self._c_steps.inc()
             if finite:
                 params = new_params
             else:
                 state = self.opt.reject(state)
+                self._c_rejected.inc()
                 log(f"[trainer] step {step}: non-finite update SKIPPED "
                     f"(rejected by {self.opt.name})")
 
@@ -98,6 +116,9 @@ class Trainer:
 
             history.append({k: float(v) for k, v in metrics.items()
                             if jnp.ndim(v) == 0})
+            if self.obs.enabled:
+                self._emit_step(step, span.seconds, history[-1],
+                                rejected=not finite, fused=fused)
             if step % self.tc.log_every == 0:
                 extras = " ".join(
                     f"{k}={history[-1][k]:.2e}" for k in ("alpha", "lam")
@@ -124,6 +145,29 @@ class Trainer:
             self._bundle_writer.wait()
         return {"params": params, "state": state, "history": history,
                 "seconds": time.time() - t_start}
+
+    # ------------------------------------------------------------------
+    def _emit_step(self, step: int, wall_s, hist_row: dict, *,
+                   rejected: bool, fused: bool):
+        """One ``train_step`` JSONL event + gauges (enabled path only).
+        The optimizer's scalar metrics ride along under their own names
+        (lam / gamma / alpha / rho / nu / staleness when present)."""
+        def fin(x):      # a rejected step's metrics may be NaN/Inf; the
+            return float(x) if np.isfinite(x) else None   # schema is finite-only
+        extras = {k: fin(hist_row[k])
+                  for k in ("lam", "gamma", "alpha", "rho", "nu",
+                            "staleness", "grad_norm", "delta_norm")
+                  if k in hist_row}
+        self.obs.emit("train_step", step=step,
+                      loss=fin(hist_row.get("loss", 0.0)),
+                      wall_s=wall_s, rejected=rejected,
+                      fused_stats=fused, **extras)
+        self.obs.gauge("train/loss").set(hist_row.get("loss", 0.0))
+        if "lam" in hist_row:
+            self.obs.gauge("train/lambda").set(hist_row["lam"])
+        if "gamma" in hist_row:
+            self.obs.gauge("train/gamma").set(hist_row["gamma"])
+        self.obs.maybe_console(step, title="train")
 
     # ------------------------------------------------------------------
     def _export_bundle(self, step: int, state, log) -> Optional[str]:
